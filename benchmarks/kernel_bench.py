@@ -1,0 +1,57 @@
+"""Kernel micro-benchmarks: PLAM simulation engines.
+
+On this CPU container the numbers measure the *simulator* (Pallas
+interpret mode executes kernel bodies as jnp on host); on TPU the same
+entry points lower through Mosaic.  What is portable and meaningful
+here: the relative cost of simulation fidelities and the codec
+throughput — the quantities a user picks a mode by.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.modes import NumericsConfig, nmatmul
+from repro.numerics import P16, encode
+from repro.kernels import plam_matmul_bits, posit_quantize
+
+
+def timeit(fn, *args, iters=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def main():
+    rng = np.random.default_rng(0)
+    rows = []
+    m = k = n = 256
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    xb, wb = encode(x, P16), encode(w, P16)
+
+    for mode in ["f32", "bf16", "posit_quant", "plam_sim", "mitchell_f32"]:
+        ncfg = NumericsConfig(mode=mode)
+        us = timeit(jax.jit(lambda a, b: nmatmul(a, b, ncfg)), x, w)
+        rows.append((f"nmatmul_{mode}_{m}x{k}x{n}", us, 2 * m * k * n / us / 1e3))
+
+    us = timeit(lambda a, b: plam_matmul_bits(a, b, P16, bm=128, bn=128, bk=128), xb, wb)
+    rows.append((f"pallas_plam_matmul_{m}x{k}x{n}", us, 2 * m * k * n / us / 1e3))
+
+    big = jnp.asarray(rng.standard_normal((1024, 1024)).astype(np.float32))
+    us = timeit(lambda v: posit_quantize(v, P16), big)
+    rows.append(("pallas_posit_quantize_1M", us, big.size * 4 / us / 1e3))
+
+    print("name,us_per_call,derived_mflops_or_MBps")
+    for name, us, d in rows:
+        print(f"{name},{us:.1f},{d:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Benchmark driver: one section per paper table/figure + system benches.
+
+  table2   — DNN inference accuracy parity (paper Table II)
+  hwcost   — multiplier area/power/delay model (paper Table III, Figs 5-6)
+  error    — PLAM error bound & distribution (paper Sec. III-C / eq. 24)
+  kernels  — Pallas/sim engine micro-benchmarks
+  train    — posit16-quantized LM training curve (system-level)
+
+``python -m benchmarks.run`` runs everything in quick mode and prints
+CSV blocks; ``--full`` uses the full Table II protocol.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def _section(name):
+    print(f"\n##### {name} " + "#" * max(1, 60 - len(name)), flush=True)
+
+
+def bench_train_quick():
+    """Posit16 vs f32 LM training on synthetic data (loss parity)."""
+    import jax
+    from repro.configs.base import ModelConfig
+    from repro.core.modes import NumericsConfig
+    from repro.data.synthetic import DataConfig, lm_batch
+    from repro.models import build
+    from repro.optim.optimizers import OptConfig, init_state
+    from repro.train.loop import TrainConfig, make_train_step
+
+    dcfg = DataConfig(seed=0, vocab=128, seq_len=64, global_batch=16)
+    print("mode,steps,first_loss,final_loss")
+    for mode in ["f32", "posit_quant"]:
+        cfg = ModelConfig(
+            name="bench", family="dense", n_layers=2, d_model=128, n_heads=4,
+            n_kv=2, head_dim=32, d_ff=256, vocab=128,
+            numerics=NumericsConfig(mode=mode, n=16, es=1),
+        )
+        api = build(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        tcfg = TrainConfig(opt=OptConfig(name="adamw", lr=3e-3))
+        step = jax.jit(make_train_step(api.train_loss, tcfg))
+        state = init_state(tcfg.opt, params)
+        losses = []
+        for i in range(40):
+            params, state, m = step(params, state, lm_batch(dcfg, i))
+            losses.append(float(m["loss"]))
+        print(f"{mode},40,{losses[0]:.6f},{losses[-1]:.6f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    def want(name):
+        return args.only is None or args.only == name
+
+    if want("error"):
+        _section("error: PLAM approximation error (paper Sec. III-C)")
+        from benchmarks import error_analysis
+        error_analysis.main()
+
+    if want("hwcost"):
+        _section("hwcost: multiplier hardware model (paper Table III / Fig. 5)")
+        from benchmarks import hw_cost
+        hw_cost.main()
+
+    if want("kernels"):
+        _section("kernels: simulation engines")
+        from benchmarks import kernel_bench
+        kernel_bench.main()
+
+    if want("train"):
+        _section("train: posit16 LM training parity")
+        bench_train_quick()
+
+    if want("table2"):
+        _section("table2: DNN inference accuracy (paper Table II)")
+        from benchmarks import table2_accuracy
+        table2_accuracy.main(quick=not args.full)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: the paper's multiplier in five steps.
+
+1. Encode floats as Posit<16,1> patterns.
+2. Multiply exactly and with PLAM; see the bounded approximation error.
+3. Run a PLAM matrix multiplication (the Pallas kernel, interpret mode).
+4. Quantize a tensor onto the posit grid (training-time fake-quant).
+5. Drop PLAM into a model via the numerics config.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.numerics import P16, decode, encode, exact_mul, plam_mul, quantize
+from repro.kernels import plam_matmul_bits
+from repro.core.modes import NumericsConfig, nmatmul
+
+# 1. encode / decode -------------------------------------------------------
+xs = jnp.asarray(np.float32([3.14159, -0.001, 42.0, 0.5]))
+bits = encode(xs, P16)
+print("floats:", xs)
+print("posit16 patterns:", [hex(int(b) & 0xFFFF) for b in bits])
+print("decoded:", decode(bits, P16))
+
+# 2. exact vs PLAM multiplication ------------------------------------------
+a, b = encode(jnp.float32(1.5), P16), encode(jnp.float32(1.5), P16)
+exact = decode(exact_mul(a, b, P16), P16)
+plam = decode(plam_mul(a, b, P16), P16)
+print(f"\n1.5 * 1.5 exact={float(exact)} plam={float(plam)} "
+      f"(rel err {float((exact - plam) / exact) * 100:.2f}%, bound 11.1%)")
+
+# 3. PLAM matmul kernel ----------------------------------------------------
+rng = np.random.default_rng(0)
+A = encode(jnp.asarray(rng.standard_normal((64, 64)).astype(np.float32)), P16)
+B = encode(jnp.asarray(rng.standard_normal((64, 64)).astype(np.float32)), P16)
+C = plam_matmul_bits(A, B, P16)
+print(f"\nPLAM matmul 64x64x64 -> mean |C| = {float(jnp.mean(jnp.abs(C))):.4f}")
+
+# 4. posit fake-quant (straight-through gradients) -------------------------
+x = jnp.linspace(-2, 2, 9)
+print("\nquantize onto posit16 grid:", quantize(x, P16))
+g = jax.grad(lambda v: jnp.sum(quantize(v, P16)))(x)
+print("STE gradient (identity):", g)
+
+# 5. numerics-aware matmul in a model --------------------------------------
+for mode in ["f32", "posit_quant", "plam_sim"]:
+    ncfg = NumericsConfig(mode=mode, n=16, es=1)
+    y = nmatmul(jnp.ones((2, 8)), jnp.full((8, 3), 0.3), ncfg)
+    print(f"nmatmul[{mode:12s}] -> {np.asarray(y[0])}")

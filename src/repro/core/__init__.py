@@ -1,0 +1,10 @@
+"""The paper's contribution as composable numerics modes + dense layer."""
+from .dense import dense, dense_init  # noqa: F401
+from .modes import (  # noqa: F401
+    EXACT_BF16,
+    PLAM16,
+    POSIT16_QUANT,
+    NumericsConfig,
+    nmatmul,
+    nquant_weight,
+)

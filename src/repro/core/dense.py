@@ -1,0 +1,20 @@
+"""Numerics-aware dense layer (pure-pytree params, no framework dep)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .modes import NumericsConfig, nmatmul
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def dense(x, w, ncfg: NumericsConfig, bias=None):
+    """y = x @ w (+ bias), multiplying per the configured numerics mode."""
+    y = nmatmul(x, w, ncfg, out_dtype=x.dtype)
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return y

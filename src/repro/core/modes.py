@@ -1,0 +1,172 @@
+"""Numerics modes: how every matmul in the framework multiplies.
+
+This is the integration point of the paper's technique.  Each model
+config carries a :class:`NumericsConfig`; `nmatmul` dispatches:
+
+* ``f32`` / ``bf16``      — exact MXU matmul (baselines).
+* ``posit_quant``         — operands projected onto the Posit<n,es>
+  grid (STE gradients), exact multiply.  The scalable emulation of
+  posit *training* (Table II's exact-posit column).
+* ``plam_sim``            — bit-exact PLAM: every scalar product is the
+  paper's logarithm-approximate multiplication, antilogged to linear
+  f32 and accumulated (EMAC).  K-chunked jnp; lowers under pjit for the
+  distributed dry-run.  The Pallas kernel (`repro.kernels`) is the same
+  math tiled for VMEM and is used on real TPU / in benchmarks.
+* ``mitchell_f32``        — float-domain Mitchell (Cheng et al. [20]),
+  the floating-point counterpart the paper compares against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.numerics import PositSpec, encode, plam_product_f32, quantize
+from repro.numerics.plam import mitchell_mul_f32
+
+MODES = ("f32", "bf16", "posit_quant", "plam_sim", "mitchell_f32")
+
+
+@dataclasses.dataclass(frozen=True)
+class NumericsConfig:
+    mode: str = "bf16"
+    n: int = 16
+    es: int = 1
+    quantize_acts: bool = True  # posit-quantize activations too (not just weights)
+    plam_chunk: int = 64  # K-chunk for the jnp plam_sim path
+    # Weights already sit on the posit grid (quantized at load / in the
+    # optimizer update), so the per-matmul weight codec is skipped.
+    # Value-identical to quantize-on-read; removes the dominant VPU +
+    # HBM cost of the simulation (see EXPERIMENTS.md §Perf).
+    prequantized_weights: bool = False
+    # Carrier dtype for quantized matmuls: "f32" preserves the posit
+    # grid exactly; "bf16" re-rounds to bf16 (double quantization) but
+    # runs on the MXU with half the traffic — the beyond-paper mode.
+    carrier: str = "f32"
+
+    def __post_init__(self):
+        assert self.mode in MODES, self.mode
+
+    @property
+    def spec(self) -> PositSpec:
+        return PositSpec(self.n, self.es)
+
+
+EXACT_BF16 = NumericsConfig(mode="bf16")
+POSIT16_QUANT = NumericsConfig(mode="posit_quant", n=16, es=1)
+PLAM16 = NumericsConfig(mode="plam_sim", n=16, es=1)
+
+
+@partial(jax.custom_jvp, nondiff_argnums=(1,))
+def _quantize_bf16(x, spec):
+    """Posit-grid projection with a bf16 STE boundary.
+
+    The straight-through identity lives at the *bf16* input dtype, so
+    reverse-mode cotangents (and the TP all-reduces that carry them)
+    stay bf16 instead of round-tripping through the f32 codec segment.
+    """
+    return quantize(x.astype(jnp.float32), spec).astype(jnp.bfloat16)
+
+
+@_quantize_bf16.defjvp
+def _quantize_bf16_jvp(spec, primals, tangents):
+    (x,), (dx,) = primals, tangents
+    return _quantize_bf16(x, spec), dx.astype(jnp.bfloat16)
+
+
+def _plam_matmul_jnp(x, w, spec: PositSpec, chunk: int):
+    """Bit-exact PLAM matmul in pure jnp, K-chunked.
+
+    x: [..., K] f32-ish, w: [K, N].  Every pairwise product is the
+    paper's approximate multiplication; accumulation is linear f32.
+    """
+    xb = encode(x, spec)
+    wb = encode(w, spec)
+    k = x.shape[-1]
+    n = w.shape[-1]
+    lead = x.shape[:-1]
+    xb2 = xb.reshape(-1, k)
+    m = xb2.shape[0]
+    chunk = min(chunk, k)
+    pad = (-k) % chunk
+    if pad:  # posit pattern 0 is exact zero: padding is value-preserving
+        xb2 = jnp.pad(xb2, ((0, 0), (0, pad)))
+        wb = jnp.pad(wb, ((0, pad), (0, 0)))
+    kc = xb2.shape[1] // chunk
+    xb3 = xb2.reshape(m, kc, chunk).transpose(1, 0, 2)  # [kc, M, chunk]
+    wb3 = wb.reshape(kc, chunk, n)  # [kc, chunk, N]
+
+    def body(acc, operands):
+        xc, wc = operands  # [M, chunk], [chunk, N]
+        prods = plam_product_f32(xc[:, :, None], wc[None, :, :], spec)
+        return acc + jnp.sum(prods, axis=1, dtype=jnp.float32), None
+
+    acc0 = jnp.zeros((m, n), jnp.float32)
+    acc, _ = jax.lax.scan(body, acc0, (xb3, wb3))
+    return acc.reshape(*lead, n)
+
+
+def _mitchell_matmul_jnp(x, w, chunk: int):
+    """Float-domain Mitchell matmul (reference baseline), K-chunked."""
+    k = x.shape[-1]
+    n = w.shape[-1]
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, k).astype(jnp.float32)
+    m = x2.shape[0]
+    chunk = min(chunk, k)
+    pad = (-k) % chunk
+    if pad:
+        x2 = jnp.pad(x2, ((0, 0), (0, pad)))
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+    kc = x2.shape[1] // chunk
+    x3 = x2.reshape(m, kc, chunk).transpose(1, 0, 2)
+    w3 = w.astype(jnp.float32).reshape(kc, chunk, n)
+
+    def body(acc, operands):
+        xc, wc = operands
+        prods = mitchell_mul_f32(xc[:, :, None], wc[None, :, :])
+        return acc + jnp.sum(prods, axis=1, dtype=jnp.float32), None
+
+    acc, _ = jax.lax.scan(body, jnp.zeros((m, n), jnp.float32), (x3, w3))
+    return acc.reshape(*lead, n)
+
+
+def nmatmul(x, w, ncfg: NumericsConfig, out_dtype=None):
+    """Numerics-aware x @ w; x: [..., K], w: [K, N]."""
+    out_dtype = out_dtype or x.dtype
+    if ncfg.mode == "f32":
+        out = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+    elif ncfg.mode == "bf16":
+        out = jnp.matmul(
+            x.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
+            preferred_element_type=jnp.float32,
+        )
+    elif ncfg.mode == "posit_quant":
+        spec = ncfg.spec
+        if ncfg.carrier == "bf16":
+            # bf16 end to end: bf16 STE boundary (cotangents + their TP
+            # all-reduces stay bf16), bf16 dot output (row-parallel
+            # partial-sum all-reduce in bf16); MXU accumulates f32.
+            xq = _quantize_bf16(x, spec) if ncfg.quantize_acts else x.astype(jnp.bfloat16)
+            wq = w.astype(jnp.bfloat16) if ncfg.prequantized_weights else _quantize_bf16(w, spec)
+            out = jnp.matmul(xq, wq)
+        else:
+            xq = quantize(x.astype(jnp.float32), spec) if ncfg.quantize_acts else x.astype(jnp.float32)
+            wq = w.astype(jnp.float32) if ncfg.prequantized_weights else quantize(w.astype(jnp.float32), spec)
+            out = jnp.matmul(xq, wq)
+    elif ncfg.mode == "plam_sim":
+        out = _plam_matmul_jnp(x.astype(jnp.float32), w.astype(jnp.float32), ncfg.spec, ncfg.plam_chunk)
+    elif ncfg.mode == "mitchell_f32":
+        out = _mitchell_matmul_jnp(x, w, ncfg.plam_chunk)
+    else:  # pragma: no cover
+        raise ValueError(ncfg.mode)
+    return out.astype(out_dtype)
+
+
+def nquant_weight(w, ncfg: NumericsConfig):
+    """Posit-quantize a weight for storage/serving, when the mode asks."""
+    if ncfg.mode in ("posit_quant", "plam_sim"):
+        return quantize(w.astype(jnp.float32), ncfg.spec).astype(w.dtype)
+    return w

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the PLAM simulator's compute hot-spots."""
+from .ops import (  # noqa: F401
+    plam_dense,
+    plam_matmul_bits,
+    posit_decode,
+    posit_encode,
+    posit_quantize,
+)

@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: single-token GQA decode attention over a KV cache.
+
+Motivated directly by the §Perf hillclimb (EXPERIMENTS.md): the XLA
+lowering of decode attention materializes transposed copies and
+convert round-trips of the cache slice per layer, and an XLA-level
+blockwise scan round-trips its online-softmax accumulator through HBM.
+This kernel streams KV blocks through VMEM with the (m, l, acc) state
+held in VMEM scratch — one HBM read of the cache, no score
+materialization: the true "flash-decode" data movement.
+
+Grid: (B, S/blk) — batch parallel, KV blocks sequential (innermost) so
+the running softmax state lives across grid steps in scratch.
+q: [B, H, hd];  k,v: [B, S, kv, hd];  lengths: [B] valid cache length.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = 512
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, blk, kv, group, hd):
+    bi = pl.program_id(0)
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32).reshape(kv, group, hd) * hd ** -0.5
+    k = k_ref[0].astype(jnp.float32)  # [blk, kv, hd]
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jnp.einsum("kgh,skh->kgs", q, k)  # [kv, group, blk]
+    k_idx = si * blk + jax.lax.broadcasted_iota(jnp.int32, (1, 1, blk), 2)
+    valid = k_idx < len_ref[0]
+    s = jnp.where(valid, s, -1e30)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    scale = jnp.exp(m_prev - m_new)
+    l_new = l_prev * scale + jnp.sum(p, axis=-1)
+    acc = acc_ref[...] * scale[..., None] + jnp.einsum("kgs,skh->kgh", p, v)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc
+
+    @pl.when(si == pl.num_programs(1) - 1)
+    def _finish():
+        o_ref[0] = (acc / l_new[..., None]).reshape(kv * group, hd).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("blk", "interpret"))
+def decode_attention(q, k, v, lengths, *, blk: int = DEFAULT_BLOCK, interpret: bool = False):
+    """q: [B, H, hd]; k, v: [B, S, kv, hd]; lengths: [B] int32.
+
+    Returns [B, H, hd].  S is padded to a block multiple (padded keys
+    masked by `lengths`).
+    """
+    b, h, hd = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    group = h // kv
+    blk = min(blk, s)
+    pad = (-s) % blk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = k.shape[1]
+    grid = (b, sp // blk)
+    return pl.pallas_call(
+        functools.partial(_kernel, blk=blk, kv=kv, group=group, hd=hd),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, si: (bi,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, h, hd), lambda bi, si: (bi, 0, 0)),
+            pl.BlockSpec((1, blk, kv, hd), lambda bi, si: (bi, si, 0, 0)),
+            pl.BlockSpec((1, blk, kv, hd), lambda bi, si: (bi, si, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, hd), lambda bi, si: (bi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((kv, group), jnp.float32),
+            pltpu.VMEM((kv, group), jnp.float32),
+            pltpu.VMEM((kv, group, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths, q, k, v)
+
+
+def decode_attention_ref(q, k, v, lengths):
+    """Pure-jnp oracle."""
+    b, h, hd = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    group = h // kv
+    qg = q.astype(jnp.float32).reshape(b, kv, group, hd) * hd ** -0.5
+    logits = jnp.einsum("bkgh,bskh->bkgs", qg, k.astype(jnp.float32))
+    mask = jnp.arange(s)[None, :] < lengths[:, None]
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", w, v.astype(jnp.float32))
+    return out.reshape(b, h, hd).astype(q.dtype)

@@ -1,0 +1,56 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+On CPU (this container) the kernels run in interpret mode — the kernel
+body executes as pure jnp on the host, which validates correctness; on
+TPU the same code lowers through Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.numerics import PositSpec, encode
+
+from . import plam_matmul as _pm
+from . import posit_codec as _pc
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def plam_matmul_bits(a_bits, b_bits, spec: PositSpec = PositSpec(16, 1), **kw):
+    """PLAM matmul over posit patterns -> f32."""
+    kw.setdefault("interpret", _interpret_default())
+    return _pm.plam_matmul(a_bits, b_bits, spec, **kw)
+
+
+def plam_dense(x, w_bits, spec: PositSpec = PositSpec(16, 1), **kw):
+    """f32 activations x posit-pattern weights via the PLAM kernel.
+
+    Activations are posit-quantized (encoded) on the fly; weights are
+    stored pre-encoded — the deployment layout for posit inference.
+    Leading batch dims of x are flattened into M.
+    """
+    kw.setdefault("interpret", _interpret_default())
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    out = _pm.plam_matmul(encode(x2, spec), w_bits, spec, **kw)
+    return out.reshape(*lead, w_bits.shape[-1])
+
+
+def posit_encode(x, spec: PositSpec = PositSpec(16, 1), **kw):
+    kw.setdefault("interpret", _interpret_default())
+    return _pc.posit_encode(x, spec, **kw)
+
+
+def posit_decode(bits, spec: PositSpec = PositSpec(16, 1), **kw):
+    kw.setdefault("interpret", _interpret_default())
+    return _pc.posit_decode(bits, spec, **kw)
+
+
+def posit_quantize(x, spec: PositSpec = PositSpec(16, 1), **kw):
+    kw.setdefault("interpret", _interpret_default())
+    return _pc.posit_quantize(x, spec, **kw)

@@ -1,0 +1,70 @@
+"""Pallas TPU kernels for posit encode/decode (quantization hot path).
+
+Pure element-wise bit manipulation — memory-bound by design.  The kernel
+bodies reuse the exact jnp bit kernels from ``repro.numerics.posit`` so
+there is a single source of truth for the codec; Pallas simply stages
+them over VMEM tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.numerics import PositSpec
+from repro.numerics.posit import decode as _decode
+from repro.numerics.posit import encode as _encode
+
+DEFAULT_BLOCK = (256, 256)
+
+
+def _encode_kernel(x_ref, o_ref, *, spec: PositSpec):
+    o_ref[...] = _encode(x_ref[...], spec)
+
+
+def _decode_kernel(b_ref, o_ref, *, spec: PositSpec):
+    o_ref[...] = _decode(b_ref[...], spec)
+
+
+def _quantize_kernel(x_ref, o_ref, *, spec: PositSpec):
+    o_ref[...] = _decode(_encode(x_ref[...], spec), spec)
+
+
+def _tiled_elementwise(kernel, x, out_dtype, spec, block, interpret):
+    """Run an element-wise kernel over a 2D-tiled view of x."""
+    shape = x.shape
+    flat = x.reshape(-1)
+    total = flat.shape[0]
+    bcols = block[0] * block[1]
+    pad = (-total) % bcols
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    rows = flat.shape[0] // block[1]
+    x2 = flat.reshape(rows, block[1])
+    grid = (rows // block[0],)
+    out = pl.pallas_call(
+        functools.partial(kernel, spec=spec),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block[0], block[1]), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block[0], block[1]), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, block[1]), out_dtype),
+        interpret=interpret,
+    )(x2)
+    return out.reshape(-1)[:total].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "block", "interpret"))
+def posit_encode(x, spec: PositSpec = PositSpec(16, 1), *, block=DEFAULT_BLOCK, interpret=False):
+    return _tiled_elementwise(_encode_kernel, x.astype(jnp.float32), jnp.int32, spec, block, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "block", "interpret"))
+def posit_decode(bits, spec: PositSpec = PositSpec(16, 1), *, block=DEFAULT_BLOCK, interpret=False):
+    return _tiled_elementwise(_decode_kernel, bits, jnp.float32, spec, block, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "block", "interpret"))
+def posit_quantize(x, spec: PositSpec = PositSpec(16, 1), *, block=DEFAULT_BLOCK, interpret=False):
+    return _tiled_elementwise(_quantize_kernel, x.astype(jnp.float32), jnp.float32, spec, block, interpret)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the semantic references the kernels must match bit-for-bit
+(`assert_allclose` with tight tolerances in tests).  They are written
+for clarity, not speed — full [M, K, N] broadcasts — so keep shapes
+small when calling them.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.numerics import PositSpec, decode, encode, plam_product_f32
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def plam_matmul_ref(a_bits, b_bits, spec: PositSpec):
+    """EMAC-style PLAM matmul oracle.
+
+    C[m, n] = sum_k PLAM(A[m, k], B[k, n]) with each approximate product
+    antilogged to linear f32 and accumulated in f32 (Johnson-style
+    linear accumulation; the paper's DNN experiments do the same via
+    Deep PeNSieve's fused dot).
+    """
+    prods = plam_product_f32(a_bits[:, :, None], b_bits[None, :, :], spec)
+    return jnp.sum(prods, axis=1, dtype=jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def plam_dense_ref(x, w_bits, spec: PositSpec):
+    """x (f32 [M,K]) @ posit-weights (bits [K,N]): quantize x, PLAM-matmul."""
+    return plam_matmul_ref(encode(x, spec), w_bits, spec)
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def posit_quantize_ref(x, spec: PositSpec):
+    """Project f32 onto the posit grid (decode(encode(x)))."""
+    return decode(encode(x, spec), spec)

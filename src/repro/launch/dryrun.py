@@ -1,0 +1,231 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")
+)
+# ^ MUST precede any other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces, without allocating any real arrays:
+  * compiled.memory_analysis()  — proves the program fits per-device HBM
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for the roofline
+  * collective bytes parsed from the compiled HLO text
+Results are appended to experiments/dryrun/<cell>.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, applicable_shapes, get_config, shape_by_name
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.launch.hlo_analysis import analyze
+from repro.launch.mesh import make_production_mesh
+from repro.models import build
+from repro.optim.optimizers import OptConfig, init_state, state_shardings
+from repro.parallel.sharding import (
+    expert_parallel_rules,
+    param_shardings,
+    pspec,
+    sanitize,
+    use_mesh,
+)
+from repro.train.loop import TrainConfig, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# input shardings
+# ---------------------------------------------------------------------------
+
+def batch_shardings(mesh, specs, *, seq_parallel: bool, kv_seq_tp: bool = False):
+    """Logical shardings for a dry-run input batch, keyed on path names.
+
+    kv_seq_tp: shard decode KV caches' sequence dim over the model axis
+    (used when kv heads are not divisible by the TP degree).
+    """
+
+    def path_str(path):
+        parts = []
+        for p in path:
+            parts.append(str(getattr(p, "key", getattr(p, "idx", p))))
+        return "/".join(parts)
+
+    def one(path, leaf):
+        ps = path_str(path)
+        r = leaf.ndim
+        if leaf.shape == ():
+            dims = ()
+        elif re.search(r"(tokens|labels|token)$", ps):
+            dims = ("batch",) + (None,) * (r - 1)
+        elif re.search(r"(embeds_prefix|frames)", ps):
+            dims = ("batch", None, None)
+        elif re.search(r"enc_out", ps):
+            dims = (None, "seq", None) if seq_parallel else ("batch", None, None)
+        elif re.search(r"(kv_caches|shared_k|shared_v)", ps) and r == 5:
+            # [L, B, S, kv, hd]
+            if seq_parallel:
+                dims = (None, None, "seq", "model", None)
+            elif kv_seq_tp:
+                # GQA with kv heads < TP degree: shard the cache SEQ dim
+                # over the model axis (flash-style partial-softmax combine)
+                dims = (None, "batch", "seq_tp", None, None)
+            else:
+                dims = (None, "batch", None, "model", None)
+        elif ps.endswith("/h") and r == 5:  # mamba state [L,B,H,ds,hd]
+            dims = (None, "batch", "model", None, None)
+        elif re.search(r"conv", ps) and r == 4:  # [L,B,K-1,C]
+            dims = (None, "batch", None, "model")
+        else:
+            dims = (None,) * r
+        dims = sanitize(mesh, dims, leaf.shape)
+        return NamedSharding(mesh, pspec(mesh, dims))
+
+    return jax.tree_util.tree_map_with_path(one, specs)
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    """Returns (step_fn, arg_specs, in_shardings) for one dry-run cell."""
+    api = build(cfg)
+    params = jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0)))
+    rules = expert_parallel_rules() if getattr(cfg, "expert_parallel", False) else None
+    p_sh = param_shardings(mesh, params, rules)
+    seq_par = shape.kind == "decode" and shape.global_batch == 1
+
+    if shape.kind == "train":
+        batch = api.train_inputs(shape)
+        b_sh = batch_shardings(mesh, batch, seq_parallel=False)
+        ocfg = OptConfig(name="adamw", lr=1e-4)
+        opt = jax.eval_shape(lambda: init_state(ocfg, params))
+        o_sh = state_shardings(ocfg, mesh, params, rules)
+        step = make_train_step(api.train_loss, TrainConfig(opt=ocfg))
+        return step, (params, opt, batch), (p_sh, o_sh, b_sh)
+
+    if shape.kind == "prefill":
+        batch = api.prefill_inputs(shape)
+        b_sh = batch_shardings(mesh, batch, seq_parallel=False)
+
+        def step(params, batch):
+            return api.prefill(params, batch)
+
+        return step, (params, batch), (p_sh, b_sh)
+
+    # decode
+    batch = api.decode_inputs(shape)
+    kv_seq_tp = bool(getattr(cfg, "kv_seq_tp", False))
+    b_sh = batch_shardings(mesh, batch, seq_parallel=seq_par, kv_seq_tp=kv_seq_tp)
+
+    def step(params, batch):
+        return api.decode_step(params, batch)
+
+    return step, (params, batch), (p_sh, b_sh)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir="experiments/dryrun",
+             cfg_override=None, tag=""):
+    cfg = cfg_override or get_config(arch)
+    shape = shape_by_name(shape_name)
+    if shape not in applicable_shapes(cfg):
+        return {"arch": arch, "shape": shape_name, "skipped": "quadratic attention at 524k (DESIGN.md §5)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with use_mesh(mesh):
+        step, args, shardings = build_cell(cfg, shape, mesh)
+        jitted = jax.jit(step, in_shardings=shardings)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo_text = compiled.as_text()
+        ana = analyze(hlo_text)  # trip-count-corrected
+
+    n_dev = mesh.devices.size
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": n_dev,
+        # per-device, trip-count-corrected (see hlo_analysis.py)
+        "flops": ana.flops,
+        "elem_ops": ana.elem_ops,
+        "bytes_accessed": ana.hbm_bytes,
+        "collectives": ana.as_dict(),
+        # raw XLA numbers (loop bodies counted once) kept for reference
+        "xla_cost_flops": float(cost.get("flops", -1)),
+        "xla_cost_bytes": float(cost.get("bytes accessed", -1)),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "numerics": cfg.numerics.mode,
+        "tag": tag,
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    stem = f"{arch}__{shape_name}__{rec['mesh']}{('__' + tag) if tag else ''}"
+    with open(os.path.join(out_dir, stem + ".json"), "w") as f:
+        json.dump(rec, f, indent=2)
+    # archive the compiled HLO so the analyzer can be re-run offline
+    import gzip
+
+    hlo_dir = os.path.join(os.path.dirname(out_dir.rstrip("/")) or ".", "hlo")
+    os.makedirs(hlo_dir, exist_ok=True)
+    with gzip.open(os.path.join(hlo_dir, stem + ".txt.gz"), "wt") as f:
+        f.write(hlo_text)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        from repro.configs.base import ALL_SHAPES
+
+        for arch in ARCHS:
+            for shape in ALL_SHAPES:  # inapplicable cells emit SKIP records
+                cells.append((arch, shape.name))
+    else:
+        cells.append((args.arch, args.shape))
+
+    for arch, shape in cells:
+        try:
+            rec = run_cell(arch, shape, multi_pod=args.multi_pod, out_dir=args.out_dir)
+            status = "SKIP" if "skipped" in rec else "OK"
+            print(f"[{status}] {arch} x {shape} ({'multi' if args.multi_pod else 'single'}): "
+                  + (rec.get("skipped") or
+                     f"flops={rec['flops']:.3e} bytes={rec['bytes_accessed']:.3e} "
+                     f"coll={rec['collectives']['collective_total']:.3e} compile={rec['compile_s']}s"),
+                  flush=True)
+        except Exception as e:  # noqa: BLE001 — a failing cell is a bug to surface
+            print(f"[FAIL] {arch} x {shape}: {type(e).__name__}: {e}", flush=True)
+            raise
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,400 @@
+"""Trip-count-corrected analysis of compiled HLO modules.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE
+(verified empirically: scan(4) and scan(8) of the same matmul report
+identical flops).  Layer-scanned models therefore undercount by ~L x.
+This module parses ``compiled.as_text()`` into a computation call graph,
+reads while trip counts from ``backend_config={"known_trip_count"...}``
+(falling back to the loop-condition constant), and aggregates
+
+  * dot/conv FLOPs            (exact, from operand/result shapes)
+  * element-op counts         (VPU proxy: result elements of non-dot ops)
+  * HBM byte traffic          (operand+result bytes of top-level ops —
+                               the XLA fusion boundary is the HBM unit)
+  * collective bytes by type  (result bytes of all-gather/all-reduce/
+                               reduce-scatter/all-to-all/collective-permute)
+
+each multiplied by the product of enclosing loop trip counts.
+Validated against cost_analysis on loop-free programs in
+tests/test_hlo_analysis.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DT_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1, "token": 0,
+    "s4": 0.5, "u4": 0.5,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|c64|c128|s64|s32|s16|s8|s4|u64|u32|u16|u8|u4|pred|token)\[([0-9,]*)\]"
+)
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+_SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "partition-id", "replica-id", "while", "conditional",
+             "call", "optimization-barrier", "domain"}
+
+
+def _dims_of(dims: str) -> List[int]:
+    return [int(d) for d in dims.split(",") if d]
+
+
+def _shape_list(text: str) -> List[Tuple[str, List[int]]]:
+    return [(dt, _dims_of(dims)) for dt, dims in _SHAPE_RE.findall(text)]
+
+
+def _nbytes(shapes) -> float:
+    return float(sum(_DT_BYTES[dt] * math.prod(d) if d else _DT_BYTES[dt]
+                     for dt, d in shapes))
+
+
+def _nelems(shapes) -> float:
+    return float(sum(math.prod(d) if d else 1 for _, d in shapes))
+
+
+@dataclasses.dataclass
+class OpLine:
+    name: str
+    opcode: str
+    result: List[Tuple[str, List[int]]]  # result shape(s)
+    operands: List[str]  # operand op names
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[OpLine]
+    by_name: Dict[str, OpLine]
+
+
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_OP_RE = re.compile(r"^(ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"\s([a-z][\w\-]*)\(")
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    comps_entry: List[str] = []
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        stripped = raw.strip()
+        if cur is None or not raw.startswith(" "):
+            m = _HEADER_RE.match(stripped)
+            if m:
+                cur = Computation(m.group(2), [], {})
+                comps[cur.name] = cur
+                if m.group(1):  # explicit ENTRY marker
+                    comps_entry.append(cur.name)
+                continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        om = _OP_RE.match(stripped)
+        if not om:
+            continue
+        rhs = om.group(3)
+        # opcode: first `word(` after the type annotation
+        oc = _OPCODE_RE.search(" " + rhs)
+        if not oc:
+            continue
+        opcode = oc.group(1)
+        type_part = rhs[: rhs.find(opcode + "(")]
+        args_m = re.search(rf"{opcode}\(([^)]*)\)", rhs)
+        operands = []
+        if args_m:
+            for tok in args_m.group(1).split(","):
+                tok = tok.strip()
+                nm = re.match(r"%?([\w\.\-]+)$", tok)
+                if nm:
+                    operands.append(nm.group(1))
+        op = OpLine(om.group(2), opcode, _shape_list(type_part), operands, stripped)
+        cur.ops.append(op)
+        cur.by_name[op.name] = op
+    return comps, comps_entry
+
+
+def _called_comps(line: str):
+    out = []
+    for attr in ("body", "condition", "calls", "to_apply"):
+        for m in re.finditer(rf"\b{attr}=%?([\w\.\-]+)", line):
+            out.append((attr, m.group(1)))
+    for m in re.finditer(r"branch_computations=\{([^}]*)\}", line):
+        for name in m.group(1).split(","):
+            out.append(("branch", name.strip().lstrip("%")))
+    return out
+
+
+def _while_trip(line: str, comps, pairs) -> float:
+    m = re.search(r'known_trip_count[":{\s]+n["\s:]+(\d+)', line)
+    if m:
+        return float(m.group(1))
+    cond_name = next((n for a, n in pairs if a == "condition"), None)
+    if cond_name and cond_name in comps:
+        consts = []
+        for op in comps[cond_name].ops:
+            for c in re.finditer(r"constant\((\d+)\)", op.line):
+                consts.append(int(c.group(1)))
+        if consts:
+            return float(max(consts))
+    return 1.0
+
+
+def _dot_flops(op: OpLine, comp: Computation) -> float:
+    out_elems = _nelems(op.result)
+    if op.opcode == "dot":
+        k = 1.0
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+        lhs = comp.by_name.get(op.operands[0]) if op.operands else None
+        if m and lhs and lhs.result:
+            ldims = lhs.result[0][1]
+            for ci in _dims_of(m.group(1)):
+                k *= ldims[ci]
+        return 2.0 * out_elems * k
+    if op.opcode == "convolution":
+        rhs = comp.by_name.get(op.operands[1]) if len(op.operands) > 1 else None
+        if rhs and rhs.result:
+            kdims = rhs.result[0][1]
+            m = re.search(r"dim_labels=[\w\d]+_([\w\d]+)->", op.line)
+            ksz = 1
+            if m:
+                for i, ch in enumerate(m.group(1)):
+                    if ch != "o":
+                        ksz *= kdims[i]
+            else:
+                ksz = math.prod(kdims[:-1])
+            return 2.0 * out_elems * ksz
+    return 0.0
+
+
+@dataclasses.dataclass
+class Analysis:
+    flops: float = 0.0
+    elem_ops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    collective_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    @property
+    def collective_total(self) -> float:
+        return float(sum(self.collective_bytes.values()))
+
+    def as_dict(self):
+        return {
+            "flops": self.flops,
+            "elem_ops": self.elem_ops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": dict(self.collective_bytes),
+            "collective_counts": dict(self.collective_counts),
+            "collective_total": self.collective_total,
+        }
+
+
+def top_contributors(hlo: str, *, key: str = "bytes", n: int = 20):
+    """Top-n (op line, metadata, contribution) — the profiling view used
+    by the §Perf hillclimb (what to optimize next)."""
+    comps, entries = parse_computations(hlo)
+    mult_c, mult_b = _multipliers(comps, entries)
+    items = []
+    for cname, comp in comps.items():
+        mc, mb = mult_c.get(cname, 0.0), mult_b.get(cname, 0.0)
+        for op in comp.ops:
+            if key == "flops":
+                v = mc * _dot_flops(op, comp) if op.opcode in ("dot", "convolution") else 0.0
+            elif key == "collective":
+                v = mc * _nbytes(op.result) if any(
+                    op.opcode in (c, c + "-start") for c in COLLECTIVES) else 0.0
+            else:
+                if op.opcode in _SKIP_OPS or any(op.opcode in (c, c + "-start") for c in COLLECTIVES):
+                    v = 0.0
+                else:
+                    v = mb * _op_traffic(op, comp, comps)
+            if v > 0:
+                meta = re.search(r'op_name="([^"]*)"', op.line)
+                items.append((v, op.opcode, meta.group(1) if meta else op.name,
+                              op.line[:140]))
+    items.sort(reverse=True)
+    return items[:n]
+
+
+_ELEMENTWISE_PASS = {"convert", "bitcast", "copy"}
+
+
+def _param_effective_read(fused: Computation, idx: int) -> Optional[float]:
+    """Bytes actually read from parameter `idx` of a fused computation.
+
+    Chases element-wise pass-through chains (convert/bitcast/copy).  A
+    parameter whose every use terminates in dynamic-slice reads only the
+    slices; one that terminates as the in-place buffer (operand 0) of a
+    dynamic-update-slice reads nothing extra (the write is counted at
+    the root); anything else reads the full operand (None)."""
+    pname = None
+    for o in fused.ops:
+        if o.opcode == "parameter" and re.search(rf"parameter\({idx}\)", o.line):
+            pname = o.name
+            break
+    if pname is None:
+        return None
+    total = 0.0
+    frontier = [pname]
+    seen = set()
+    while frontier:
+        cur = frontier.pop()
+        if cur in seen:
+            continue
+        seen.add(cur)
+        for o in fused.ops:
+            if cur not in o.operands:
+                continue
+            if o.opcode in _ELEMENTWISE_PASS:
+                frontier.append(o.name)
+            elif o.opcode in ("dynamic-slice", "slice", "gather"):
+                total += _nbytes(o.result)
+            elif o.opcode == "dynamic-update-slice" and o.operands[0] == cur:
+                pass  # in-place target: write counted at the root
+            else:
+                return None  # fully read by some consumer
+    return total
+
+
+def _root_effective_write(fused: Computation) -> Optional[float]:
+    """If the fusion root is (an element-wise wrap of) a dynamic-update-
+    slice, the write traffic is the update window, not the buffer."""
+    root = next((o for o in fused.ops if o.line.startswith("ROOT")), None)
+    hops = 0
+    while root is not None and root.opcode in _ELEMENTWISE_PASS and hops < 4:
+        root = fused.by_name.get(root.operands[0]) if root.operands else None
+        hops += 1
+    if root is not None and root.opcode == "dynamic-update-slice":
+        upd = fused.by_name.get(root.operands[1]) if len(root.operands) > 1 else None
+        if upd is not None:
+            return 2.0 * _nbytes(upd.result)  # read update + write window
+    return None
+
+
+def _op_traffic(op: OpLine, comp: Computation, comps=None) -> float:
+    if op.opcode in ("dynamic-slice", "slice", "gather"):
+        return 2.0 * _nbytes(op.result)
+    if op.opcode in ("dynamic-update-slice", "scatter"):
+        upd = comp.by_name.get(op.operands[1]) if len(op.operands) > 1 else None
+        return 2.0 * (_nbytes(upd.result) if upd else _nbytes(op.result))
+    fused = None
+    if op.opcode == "fusion" and comps is not None:
+        m = re.search(r"calls=%?([\w\.\-]+)", op.line)
+        if m:
+            fused = comps.get(m.group(1))
+    nb = _nbytes(op.result)
+    if fused is not None:
+        w = _root_effective_write(fused)
+        if w is not None:
+            nb = w
+    for i, o in enumerate(op.operands):
+        srcop = comp.by_name.get(o)
+        if srcop is None:
+            continue
+        full = _nbytes(srcop.result)
+        if fused is not None and full > 0:
+            eff = _param_effective_read(fused, i)
+            if eff is not None:
+                full = min(full, eff)
+        nb += full
+    return nb
+
+
+def _multipliers(comps, entries):
+    mult_c: Dict[str, float] = defaultdict(float)
+    mult_b: Dict[str, float] = defaultdict(float)
+    if entries:
+        entry = entries[0]
+    else:
+        called = {n for c in comps.values() for op in c.ops for _, n in _called_comps(op.line)}
+        entry = next((c for c in comps if c not in called), next(iter(comps)))
+    mult_c[entry] = 1.0
+    mult_b[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    while order:
+        cname = order.pop(0)
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for op in comp.ops:
+            pairs = _called_comps(op.line)
+            if not pairs:
+                continue
+            trip = _while_trip(op.line, comps, pairs) if op.opcode == "while" else 1.0
+            for attr, n in pairs:
+                if attr == "body":
+                    mc, mb = mult_c[cname] * trip, mult_b[cname] * trip
+                elif attr == "condition":
+                    mc, mb = mult_c[cname], 0.0
+                elif attr in ("calls", "to_apply"):
+                    mc, mb = mult_c[cname], 0.0
+                else:
+                    mc, mb = mult_c[cname], mult_b[cname]
+                mult_c[n] += mc
+                mult_b[n] += mb
+                if n not in seen:
+                    seen.add(n)
+                    order.append(n)
+    return mult_c, mult_b
+
+
+def analyze(hlo: str) -> Analysis:
+    comps, entries = parse_computations(hlo)
+    # Two multipliers per computation: compute (flops/element ops) and
+    # traffic (HBM bytes).  Fusion-internal computations keep compute
+    # multipliers but contribute ZERO HBM traffic (registers/VMEM).
+    mult_c, mult_b = _multipliers(comps, entries)
+
+    out = Analysis()
+    for cname, comp in comps.items():
+        mc = mult_c.get(cname, 0.0)
+        mb = mult_b.get(cname, 0.0)
+        if mc == 0.0 and mb == 0.0:
+            continue
+        for op in comp.ops:
+            matched_coll = None
+            for c in COLLECTIVES:
+                if op.opcode in (c, c + "-start"):
+                    matched_coll = c
+                    break
+            if matched_coll:
+                nb = _nbytes(op.result)
+                # XLA:CPU promotes bf16 reductions to f32 (`..._promoted`
+                # reducers with a convert-fed operand); TPU reduces in the
+                # source dtype — count the unpromoted width.
+                if "promoted" in op.line:
+                    src = comp.by_name.get(op.operands[0]) if op.operands else None
+                    if src is not None and ("convert" in src.opcode or "convert" in src.name):
+                        nb /= 2.0
+                out.collective_bytes[matched_coll] += mc * nb
+                out.collective_counts[matched_coll] += mc
+                out.hbm_bytes += mc * nb
+                continue
+            if op.opcode in ("dot", "convolution"):
+                out.flops += mc * _dot_flops(op, comp)
+            if op.opcode in _SKIP_OPS:
+                continue
+            if op.opcode not in ("dot", "convolution", "fusion"):
+                out.elem_ops += mc * _nelems(op.result)
+            # HBM traffic at the fusion boundary; sliced accesses (incl.
+            # dynamic-slice/-update-slice fused into consumers) move only
+            # the slice, not the full operand — see _op_traffic.
+            out.hbm_bytes += mb * _op_traffic(op, comp, comps)
+    return out

@@ -1,0 +1,229 @@
+"""Roofline analysis over dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, from the trip-count-corrected HLO
+analysis recorded by dryrun.py:
+
+  compute term    = HLO_MXU_FLOPs/chip / peak_MXU  +  elem_ops/chip / peak_VPU
+  memory term     = HLO_bytes/chip / HBM_bw
+  collective term = link_bytes/chip / link_bw   (per-type ring factors)
+
+Hardware constants (TPU v5e-class, per task spec): 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.  VPU peak is a documented heuristic
+(8-wide VPU issue vs MXU): 197/16 ~= 12.3 T elementwise ops/s.
+
+MODEL_FLOPS uses the standard 6*N*D (train) / 2*N*D (prefill) /
+2*N_active*B (decode) convention plus attention quadratic terms, with
+N_active counting MoE experts at top_k/E utilization.
+
+The reported `roofline_fraction` is an MFU-style bound:
+  (model_flops_per_chip / peak_MXU) / max(compute, memory, collective)
+i.e. what fraction of the best-achievable step time is useful model
+math.  This is the §Perf score; hillclimbing drives the dominant term
+down and the fraction up.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import math
+import os
+from typing import Dict
+
+PEAK_MXU = 197e12  # bf16 FLOP/s per chip
+PEAK_VPU = PEAK_MXU / 16  # heuristic elementwise op/s per chip
+HBM_BW = 819e9  # B/s per chip
+LINK_BW = 50e9  # B/s per ICI link
+
+# ring-algorithm byte multipliers on result bytes
+_COLL_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def count_params(cfg) -> Dict[str, float]:
+    """Total / active (MoE top-k utilized) / encoder / decoder params."""
+    import jax
+    from repro.models import build
+
+    api = build(cfg)
+    tree = jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0)))
+    total = routed = enc = 0
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in flat:
+        sz = math.prod(leaf.shape)
+        total += sz
+        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if "moe/" in pstr and pstr.split("/")[-1] in ("wg", "wu", "wd"):
+            routed += sz
+        if "enc_layers" in pstr or "frontend" in pstr:
+            enc += sz
+    active = total - routed
+    if cfg.n_experts:
+        active += routed * cfg.top_k / cfg.n_experts
+    return {"total": float(total), "active": float(active),
+            "enc": float(enc), "dec": float(total - enc)}
+
+
+def model_flops(cfg, shape, params: Dict[str, float]) -> float:
+    """Ideal useful FLOPs for the step (global, all chips)."""
+    n_act = params["active"]
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        pass  # patch prefix replaces tokens 1:1; same token count
+    d_attn = (cfg.n_heads or 0) * cfg.hd if cfg.n_heads else 0
+
+    def dense_flops(mult):
+        if cfg.family == "encdec":
+            # encoder sees s source frames, decoder sees <=4096 targets
+            tgt = min(s, 4096)
+            return mult * (params["enc"] * b * s + params["dec"] * b * tgt)
+        return mult * n_act * b * s
+
+    if shape.kind == "train":
+        flops = dense_flops(6.0)
+        # causal attention quadratic term: fwd 2*2*(S^2/2)*d_attn per layer
+        if d_attn and cfg.family != "encdec":
+            flops += 3 * 2 * 2 * 0.5 * cfg.n_layers * s * s * d_attn * b
+        return flops
+    if shape.kind == "prefill":
+        flops = dense_flops(2.0)
+        if d_attn and cfg.family != "encdec":
+            flops += 2 * 2 * 0.5 * cfg.n_layers * s * s * d_attn * b
+        return flops
+    # decode: one token over a cache of length s
+    flops = 2.0 * n_act * b
+    if d_attn and cfg.family not in ("ssm",):
+        layers = cfg.n_layers if cfg.family != "hybrid" else cfg.n_layers // max(cfg.shared_attn_every, 1)
+        kv_d = (cfg.n_kv or 0) * cfg.hd
+        flops += 2 * 2 * layers * s * (kv_d or d_attn) * b
+    return flops
+
+
+def model_bytes(cfg, shape, params) -> float:
+    """Ideal HBM traffic for the step (global): weights read once +
+    KV/state cache read+written once (decode) or activations (train)."""
+    wb = params["active"] * 2  # bf16 weights
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        if cfg.family == "ssm":
+            cache = cfg.n_layers * b * (cfg.ssm_expand * cfg.d_model // cfg.ssm_head_dim) \
+                * cfg.ssm_state * cfg.ssm_head_dim * 4
+        elif cfg.family == "hybrid":
+            n_inv = cfg.n_layers // max(cfg.shared_attn_every, 1)
+            cache = n_inv * b * s * cfg.n_kv * (2 * cfg.d_model // cfg.n_heads) * 2 * 2
+            cache += cfg.n_layers * b * 2 * cfg.d_model * cfg.ssm_state * 4
+        else:
+            layers = cfg.dec_layers if cfg.family == "encdec" else cfg.n_layers
+            slen = min(s, 4096) if cfg.family == "encdec" else s
+            cache = layers * b * slen * cfg.n_kv * cfg.hd * 2 * 2
+        return wb + cache
+    # train/prefill: weights + one activations pass (rough ideal)
+    act = cfg.n_layers * b * min(s, 524_288) * cfg.d_model * 2
+    return wb + act
+
+
+def roofline_row(rec: dict, cfg, shape) -> dict:
+    ndev = rec["devices"]
+    t_compute = rec["flops"] / PEAK_MXU + rec.get("elem_ops", 0) / PEAK_VPU
+    t_memory = rec["bytes_accessed"] / HBM_BW
+    coll = rec["collectives"]["collective_bytes"]
+    t_coll = sum(_COLL_FACTOR.get(k, 1.0) * v for k, v in coll.items()) / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    params = count_params(cfg)
+    mf = model_flops(cfg, shape, params)
+    mf_dev = mf / ndev
+    mb_dev = model_bytes(cfg, shape, params) / ndev
+    # ideal step time: whichever resource the *ideal* program needs more of
+    t_ideal = max(mf_dev / PEAK_MXU, mb_dev / HBM_BW)
+    t_bound = max(terms.values())
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "numerics": rec.get("numerics", "?"),
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_global": mf,
+        "hlo_flops_per_dev": rec["flops"],
+        "useful_ratio": mf_dev / rec["flops"] if rec["flops"] else float("nan"),
+        "mem_useful_ratio": mb_dev / rec["bytes_accessed"] if rec["bytes_accessed"] else float("nan"),
+        "roofline_fraction": t_ideal / t_bound if t_bound else float("nan"),
+        "params_total": params["total"],
+        "params_active": params["active"],
+        "tag": rec.get("tag", ""),
+    }
+
+
+def load_and_report(dryrun_dir="experiments/dryrun", out_md="experiments/roofline.md",
+                    mesh_filter="16x16"):
+    from repro.configs import get_config, shape_by_name
+
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(f))
+        if "skipped" in rec or rec.get("mesh") != mesh_filter or rec.get("tag"):
+            continue
+        cfg = get_config(rec["arch"])
+        shape = shape_by_name(rec["shape"])
+        rows.append(roofline_row(rec, cfg, shape))
+
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    hdr = ("| arch | shape | dominant | compute s | memory s | collective s | "
+           "useful-flops | useful-bytes | roofline frac |")
+    lines = [hdr, "|" + "---|" * 9]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | **{r['dominant']}** | "
+            f"{r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"{r['useful_ratio']:.2f} | {r['mem_useful_ratio']:.2f} | {r['roofline_fraction']:.3f} |")
+    md = "\n".join(lines)
+    os.makedirs(os.path.dirname(out_md), exist_ok=True)
+    with open(out_md, "w") as f:
+        f.write(md + "\n")
+    return rows, md
+
+
+def reanalyze(dryrun_dir="experiments/dryrun", hlo_dir="experiments/hlo"):
+    """Re-run the HLO analyzer over archived compiled modules (no
+    recompiles) and refresh the dry-run JSON records in place."""
+    import gzip
+
+    from repro.launch.hlo_analysis import analyze
+
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(f))
+        if "skipped" in rec:
+            continue
+        stem = os.path.splitext(os.path.basename(f))[0]
+        hlo_path = os.path.join(hlo_dir, stem + ".txt.gz")
+        if not os.path.exists(hlo_path):
+            continue
+        with gzip.open(hlo_path, "rt") as fh:
+            ana = analyze(fh.read())
+        rec["flops"] = ana.flops
+        rec["elem_ops"] = ana.elem_ops
+        rec["bytes_accessed"] = ana.hbm_bytes
+        rec["collectives"] = ana.as_dict()
+        json.dump(rec, open(f, "w"), indent=2)
+        print(f"reanalyzed {stem}")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--reanalyze", action="store_true")
+    args = ap.parse_args()
+    if args.reanalyze:
+        reanalyze(args.dir)
+    rows, md = load_and_report(args.dir, mesh_filter=args.mesh)
+    print(md)

@@ -1,0 +1,82 @@
+"""Training driver: any assigned arch (reduced or full), any numerics.
+
+CPU-scale example (reduced config, posit16, fault-tolerant):
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --reduced \
+      --steps 50 --numerics posit_quant --ckpt-dir /tmp/ck --simulate-failure 30
+
+On a real cluster the same entry point runs the full config against the
+production mesh (params/optimizer sharded per repro.parallel rules).
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import ARCHS, get_config
+from repro.core.modes import NumericsConfig
+from repro.data.synthetic import DataConfig, lm_batch
+from repro.models import build
+from repro.optim.optimizers import OptConfig
+from repro.train.loop import FailureInjector, TrainConfig, run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--numerics", default="posit_quant",
+                    choices=["f32", "bf16", "posit_quant", "plam_sim", "mitchell_f32"])
+    ap.add_argument("--posit-n", type=int, default=16)
+    ap.add_argument("--posit-es", type=int, default=1)
+    ap.add_argument("--carrier", default="f32", choices=["f32", "bf16"])
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--opt", default="adamw", choices=["adamw", "adam", "sgd", "nesterov"])
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--simulate-failure", type=int, default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+        cfg = dataclasses.replace(cfg, param_dtype="float32", act_dtype="float32")
+    cfg = cfg.with_numerics(NumericsConfig(
+        mode=args.numerics, n=args.posit_n, es=args.posit_es, carrier=args.carrier))
+    api = build(cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(
+        jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0)))))
+    print(f"arch={cfg.name}{' (reduced)' if args.reduced else ''} "
+          f"params={n_params/1e6:.1f}M numerics={cfg.numerics.mode}/{args.carrier}")
+
+    if cfg.family == "encdec" or cfg.family == "vlm":
+        raise SystemExit("use examples/ for multimodal training demos; LM families here")
+
+    dcfg = DataConfig(seed=0, vocab=cfg.vocab, seq_len=args.seq_len, global_batch=args.batch)
+    tcfg = TrainConfig(
+        opt=OptConfig(name=args.opt, lr=args.lr),
+        grad_accum=args.grad_accum,
+        compress_grads=args.compress_grads,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+    )
+    failure = FailureInjector([args.simulate_failure]) if args.simulate_failure else None
+    _, _, info = run(
+        loss_fn=api.train_loss,
+        init_params_fn=lambda: api.init(jax.random.PRNGKey(0)),
+        batch_fn=lambda s: lm_batch(dcfg, s),
+        tcfg=tcfg,
+        num_steps=args.steps,
+        failure=failure,
+    )
+    for s, l in info["history"]:
+        print(f"step {s:5d}  loss {l:.4f}")
+    print(f"restarts={info['restarts']} final_step={info['final_step']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model zoo: one scan-based implementation per architecture family."""
+from .registry import ModelAPI, build  # noqa: F401

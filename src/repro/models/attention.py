@@ -1,0 +1,171 @@
+"""Grouped-query attention with KV cache, numerics-aware projections.
+
+The attention core (QK^T, AV) runs in bf16/f32 on the MXU; the paper's
+PLAM applies to the *linear layers* (as in its DNN experiments), which
+route through ``repro.core.dense``.  Softmax is f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dense import dense, dense_init
+from repro.core.modes import NumericsConfig
+
+from .common import apply_rope, causal_mask
+
+
+def attn_init(key, d: int, n_heads: int, n_kv: int, head_dim: int, dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, d, n_heads * head_dim, dtype),
+        "wk": dense_init(k2, d, n_kv * head_dim, dtype),
+        "wv": dense_init(k3, d, n_kv * head_dim, dtype),
+        "wo": dense_init(k4, n_heads * head_dim, d, dtype),
+    }
+
+
+def _split_heads(x, n, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd)
+
+
+def attn_core(q, k, v, mask, softcap=None):
+    """q: [B,Sq,H,hd]; k,v: [B,Sk,Kv,hd]; mask: [Sq,Sk] or [B,1,Sq,Sk]."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    group = h // kv
+    qg = q.reshape(b, sq, kv, group, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32)
+    logits *= hd ** -0.5
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    if mask.ndim == 2:
+        mask_b = mask[None, None, None, :, :]
+    else:
+        mask_b = mask[:, :, None, :, :] if mask.ndim == 4 else mask
+    logits = jnp.where(mask_b, logits, jnp.float32(-1e30))
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def attn_core_blockwise(q, k, v, *, causal: bool, block: int, softcap=None):
+    """Flash-style blockwise attention (training/prefill path).
+
+    Scans KV blocks with a running (max, sum, acc) online softmax, so
+    the [Sq, Sk] score matrix is never materialized in HBM — one block
+    of scores lives at a time (VMEM-sized on TPU).  Exact same math as
+    `attn_core` (tested to ~1e-6).
+    """
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    group = h // kv
+    qg = (q.reshape(b, sq, kv, group, hd).astype(jnp.float32)) * hd ** -0.5
+    sk = k.shape[1]
+    block = min(block, sk)
+    assert sk % block == 0, (sk, block)
+    nb = sk // block
+    kb = k.astype(jnp.float32).reshape(b, nb, block, kv, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.astype(jnp.float32).reshape(b, nb, block, kv, hd).transpose(1, 0, 2, 3, 4)
+
+    q_idx = jnp.arange(sq)
+
+    def body(carry, inp):
+        m, l, acc = carry  # running max, normalizer, accumulator
+        kc, vc, blk = inp  # [B, block, kv, hd] x2, block index
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qg, kc)
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        if causal:
+            k_idx = blk * block + jnp.arange(block)
+            msk = k_idx[None, :] <= q_idx[:, None]  # [sq, block]
+            s = jnp.where(msk[None, None, None, :, :], s, jnp.float32(-1e30))
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        scale = jnp.exp(m - m_new)
+        l_new = l * scale + jnp.sum(p, axis=-1)
+        acc_new = acc * scale[..., None] + jnp.einsum("bkgqs,bskh->bkgqh", p, vc)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kv, group, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kv, group, sq), jnp.float32)
+    acc0 = jnp.zeros((b, kv, group, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (kb, vb, jnp.arange(nb)))
+    out = acc / l[..., None]
+    # [B,kv,g,Sq,hd] -> [B,Sq,H,hd]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+def attn_apply(
+    p,
+    x,
+    ncfg: NumericsConfig,
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    positions,
+    rope_theta: float = 10_000.0,
+    mrope_sections=None,
+    kv_cache=None,
+    cache_len=None,
+    mask: str | jnp.ndarray = "causal",
+    softcap=None,
+    flash_block: int = 0,
+):
+    """Returns (out [B,S,d], new_kv) where new_kv is the updated cache
+    (if one was passed) or the fresh (k, v) tensors."""
+    b, s, _ = x.shape
+    q = _split_heads(dense(x, p["wq"], ncfg), n_heads, head_dim)
+    k = _split_heads(dense(x, p["wk"], ncfg), n_kv, head_dim)
+    v = _split_heads(dense(x, p["wv"], ncfg), n_kv, head_dim)
+    q = apply_rope(q, positions, rope_theta, mrope_sections)
+    k = apply_rope(k, positions, rope_theta, mrope_sections)
+
+    if kv_cache is not None:
+        # decode / chunked prefill: write at cache_len, attend over prefix
+        ck, cv = kv_cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_len, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_len, 0, 0))
+        s_k = ck.shape[1]
+        ki = jnp.arange(s_k)[None, :]
+        qi = cache_len + jnp.arange(s)[:, None]
+        m = ki <= qi  # causal over the cache prefix
+        out = attn_core(q, ck, cv, m, softcap)
+        new_kv = (ck, cv)
+    else:
+        if flash_block and isinstance(mask, str) and s % flash_block == 0:
+            out = attn_core_blockwise(
+                q, k, v, causal=(mask == "causal"), block=flash_block, softcap=softcap)
+        else:
+            if isinstance(mask, str):
+                m = causal_mask(s, s) if mask == "causal" else jnp.ones((s, s), bool)
+            else:
+                m = mask
+            out = attn_core(q, k, v, m, softcap)
+        new_kv = (k, v)
+
+    out = dense(out.reshape(b, s, n_heads * head_dim), p["wo"], ncfg)
+    return out, new_kv
+
+
+def cross_attn_init(key, d: int, n_heads: int, n_kv: int, head_dim: int, dtype=jnp.float32):
+    return attn_init(key, d, n_heads, n_kv, head_dim, dtype)
+
+
+def cross_attn_apply(p, x, enc_kv, ncfg: NumericsConfig, *, n_heads, n_kv, head_dim):
+    """Decoder cross-attention over precomputed encoder (k, v)."""
+    b, s, _ = x.shape
+    q = _split_heads(dense(x, p["wq"], ncfg), n_heads, head_dim)
+    k, v = enc_kv
+    m = jnp.ones((s, k.shape[1]), bool)
+    out = attn_core(q, k, v, m)
+    return dense(out.reshape(b, s, n_heads * head_dim), p["wo"], ncfg)
+
+
+def encode_cross_kv(p, enc_out, ncfg: NumericsConfig, *, n_kv, head_dim):
+    k = _split_heads(dense(enc_out, p["wk"], ncfg), n_kv, head_dim)
+    v = _split_heads(dense(enc_out, p["wv"], ncfg), n_kv, head_dim)
+    return k, v

@@ -1,0 +1,97 @@
+"""Shared model components: norms, rotary embeddings (incl. M-RoPE),
+token embeddings.  Pure functions over pytree params."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+from functools import partial as _partial
+
+
+@_partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rmsnorm_core(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _rmsnorm_fwd(x, scale, eps):
+    return _rmsnorm_core(x, scale, eps), (x, scale)
+
+
+def _rmsnorm_bwd(eps, res, ct):
+    # Keeps the cotangent boundary at the ACTIVATION dtype: upstream
+    # sums of branch cotangents (and the TP all-reduces carrying them)
+    # stay bf16 instead of being reassociated into this f32 math
+    # (EXPERIMENTS.md §Perf, command-r hillclimb).
+    x, scale = res
+    xf = x.astype(jnp.float32)
+    g = ct.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    sg = g * scale.astype(jnp.float32)
+    dx = inv * sg - xf * (inv ** 3) * jnp.mean(sg * xf, axis=-1, keepdims=True)
+    dscale = jnp.sum(g * xf * inv, axis=tuple(range(x.ndim - 1)))
+    return dx.astype(x.dtype), dscale.astype(scale.dtype)
+
+
+_rmsnorm_core.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    return _rmsnorm_core(x, p["scale"], eps)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * (d ** -0.5)).astype(dtype)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def apply_rope(x, positions, theta: float, sections=None):
+    """Rotary embedding.  x: [B, S, H, hd]; positions: [B, S] int32, or
+    [3, B, S] for M-RoPE with ``sections`` = 3 half-dim section sizes
+    (temporal, height, width), as in Qwen2-VL.
+    """
+    half = x.shape[-1] // 2
+    inv = rope_freqs(x.shape[-1], theta)  # [half]
+    if sections is None:
+        ang = positions.astype(jnp.float32)[..., None] * inv  # [B,S,half]
+    else:
+        assert sum(sections) == half, (sections, half)
+        parts = []
+        start = 0
+        for i, sec in enumerate(sections):
+            ang_i = positions[i].astype(jnp.float32)[..., None] * inv[start:start + sec]
+            parts.append(ang_i)
+            start += sec
+        ang = jnp.concatenate(parts, axis=-1)  # [B,S,half]
+    cos = jnp.cos(ang)[:, :, None, :]  # [B,S,1,half]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def causal_mask(s_q: int, s_k: int, q_offset=0):
+    """[s_q, s_k] bool mask; True = attend."""
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    ki = jnp.arange(s_k)[None, :]
+    return ki <= qi
+
+
+def stack_layer_params(init_one, key, n_layers: int):
+    """vmap a per-layer init over layer keys -> stacked [L, ...] pytree."""
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(init_one)(keys)

@@ -1,0 +1,159 @@
+"""Encoder-decoder transformer (seamless-m4t-medium backbone).
+
+The audio frontend is a stub per the task spec: inputs are precomputed
+frame embeddings [B, frames, d].  Encoder is bidirectional; decoder has
+causal self-attention + cross-attention over the encoder output.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.dense import dense_init
+from repro.parallel.sharding import constrain
+
+from .attention import attn_apply, attn_init, cross_attn_apply, encode_cross_kv
+from .common import embed_init, rmsnorm, rmsnorm_init, stack_layer_params
+from .mlp import mlp_apply, mlp_init
+from .transformer import default_positions, lm_loss_chunked
+
+
+def _enc_layer_init(cfg: ModelConfig, key, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd, dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.glu, dtype),
+    }
+
+
+def _dec_layer_init(cfg: ModelConfig, key, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = _enc_layer_init(cfg, jax.random.fold_in(key, 0), dtype)
+    p["ln_x"] = rmsnorm_init(cfg.d_model, dtype)
+    p["xattn"] = attn_init(k3, cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd, dtype)
+    return p
+
+
+def encdec_init(cfg: ModelConfig, key):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, k1, k2, ku, kf = jax.random.split(key, 5)
+    return {
+        "frontend_proj": dense_init(kf, cfg.frontend_dim, cfg.d_model, dtype),
+        "embed": embed_init(ke, cfg.vocab, cfg.d_model, dtype),
+        "enc_layers": stack_layer_params(partial(_enc_layer_init, cfg, dtype=dtype), k1, cfg.enc_layers),
+        "dec_layers": stack_layer_params(partial(_dec_layer_init, cfg, dtype=dtype), k2, cfg.dec_layers),
+        "ln_enc": rmsnorm_init(cfg.d_model, dtype),
+        "ln_dec": rmsnorm_init(cfg.d_model, dtype),
+        "unembed": dense_init(ku, cfg.d_model, cfg.vocab, dtype),
+    }
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """frames: [B, S_src, frontend_dim] precomputed (stub frontend)."""
+    from repro.core.dense import dense
+
+    x = dense(frames.astype(jnp.dtype(cfg.act_dtype)), params["frontend_proj"], cfg.numerics)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = constrain(x, "batch", None, None)
+
+    def body(x, lp):
+        h, _ = attn_apply(
+            lp["attn"], rmsnorm(lp["ln1"], x), cfg.numerics,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
+            positions=positions, rope_theta=cfg.rope_theta, mask="full",
+        )
+        x = x + h
+        x = x + mlp_apply(lp["mlp"], rmsnorm(lp["ln2"], x), cfg.numerics, cfg.act)
+        return constrain(x, "batch", None, None), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rmsnorm(params["ln_enc"], x)
+
+
+def _decoder(cfg, params, y_embeds, positions, enc_out, kv_caches=None, cache_len=None):
+    x = constrain(y_embeds, "batch", None, None)
+
+    def body(carry, scanned):
+        x = carry
+        if kv_caches is None:
+            lp = scanned
+            kv_slice = None
+        else:
+            lp, ck, cv = scanned
+            kv_slice = (ck, cv)
+        h, new_kv = attn_apply(
+            lp["attn"], rmsnorm(lp["ln1"], x), cfg.numerics,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
+            positions=positions, rope_theta=cfg.rope_theta,
+            kv_cache=kv_slice, cache_len=cache_len, mask="causal",
+        )
+        x = x + h
+        enc_kv = encode_cross_kv(lp["xattn"], enc_out, cfg.numerics, n_kv=cfg.n_kv, head_dim=cfg.hd)
+        x = x + cross_attn_apply(
+            lp["xattn"], rmsnorm(lp["ln_x"], x), enc_kv, cfg.numerics,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
+        )
+        x = x + mlp_apply(lp["mlp"], rmsnorm(lp["ln2"], x), cfg.numerics, cfg.act)
+        x = constrain(x, "batch", None, None)
+        return x, (None if kv_caches is None else new_kv)
+
+    if kv_caches is None:
+        x, _ = jax.lax.scan(body, x, params["dec_layers"])
+        new_caches = None
+    else:
+        x, new_caches = jax.lax.scan(body, x, (params["dec_layers"], *kv_caches))
+    return rmsnorm(params["ln_dec"], x), new_caches
+
+
+def train_loss(cfg: ModelConfig, params, batch):
+    """batch: frames [B,S_src,Fd], tokens [B,S_tgt], labels [B,S_tgt]."""
+    enc_out = encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    y = params["embed"][tokens].astype(jnp.dtype(cfg.act_dtype))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    hidden, _ = _decoder(cfg, params, y, positions, enc_out)
+    # reuse the chunked CE via a dense-LM-compatible view
+    from repro.core.dense import dense
+
+    import dataclasses
+    cfg_lm = dataclasses.replace(cfg, tie_embeddings=False)
+    return lm_loss_chunked(cfg_lm, {"unembed": params["unembed"]}, hidden, batch["labels"])
+
+
+def kv_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    shape = (cfg.dec_layers, batch, max_len, cfg.n_kv, cfg.hd)
+    return (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def prefill(cfg: ModelConfig, params, frames, tokens, kv_caches):
+    enc_out = encode(cfg, params, frames)
+    b, s = tokens.shape
+    y = params["embed"][tokens].astype(jnp.dtype(cfg.act_dtype))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    hidden, new_caches = _decoder(
+        cfg, params, y, positions, enc_out, kv_caches=kv_caches, cache_len=jnp.int32(0)
+    )
+    from repro.core.dense import dense
+
+    logits = dense(hidden[:, -1:, :], params["unembed"], cfg.numerics)
+    return logits, new_caches
+
+
+def decode_step(cfg: ModelConfig, params, token, enc_out, kv_caches, cache_len):
+    b = token.shape[0]
+    y = params["embed"][token].astype(jnp.dtype(cfg.act_dtype))
+    positions = jnp.broadcast_to(cache_len + jnp.zeros((b, 1), jnp.int32), (b, 1))
+    hidden, new_caches = _decoder(
+        cfg, params, y, positions, enc_out, kv_caches=kv_caches, cache_len=cache_len
+    )
+    from repro.core.dense import dense
+
+    logits = dense(hidden, params["unembed"], cfg.numerics)
+    return logits, new_caches

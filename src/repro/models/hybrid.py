@@ -1,0 +1,181 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one SHARED attention block.
+
+The shared transformer block (one set of weights) is applied every
+``shared_attn_every`` SSM layers; its input is concat(hidden, original
+embeddings) — 2*d_model wide, as in Zamba — projected back to d_model.
+(Zamba2's per-invocation LoRA deltas on the shared weights are omitted;
+see DESIGN.md.)
+
+Layers are scanned in groups between shared-block invocations so the
+HLO stays small; each invocation has its own KV cache slot.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.dense import dense, dense_init
+from repro.parallel.sharding import constrain
+
+from .attention import attn_apply, attn_init
+from .common import embed_init, rmsnorm, rmsnorm_init, stack_layer_params
+from .mlp import mlp_apply, mlp_init
+from .ssm import mamba2_apply, mamba2_cache_init, mamba2_init
+from .transformer import lm_loss_chunked
+
+
+def _ssm_kw(cfg: ModelConfig):
+    return dict(expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim,
+                d_state=cfg.ssm_state, chunk=cfg.ssm_chunk)
+
+
+def hybrid_init(cfg: ModelConfig, key):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, km, ks, ku = jax.random.split(key, 4)
+    d2 = 2 * cfg.d_model
+
+    def one(k):
+        return {
+            "ln": rmsnorm_init(cfg.d_model, dtype),
+            "mamba": mamba2_init(
+                k, cfg.d_model, expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim,
+                d_state=cfg.ssm_state, d_conv=cfg.ssm_conv, dtype=dtype,
+            ),
+        }
+
+    k1, k2, k3 = jax.random.split(ks, 3)
+    shared = {
+        "ln1": rmsnorm_init(d2, dtype),
+        "attn": attn_init(k1, d2, cfg.n_heads, cfg.n_kv, 2 * cfg.d_model // cfg.n_heads, dtype),
+        "ln2": rmsnorm_init(d2, dtype),
+        "mlp": mlp_init(k2, d2, cfg.d_ff, cfg.glu, dtype),
+        "out_proj": dense_init(k3, d2, cfg.d_model, dtype),
+    }
+    return {
+        "embed": embed_init(ke, cfg.vocab, cfg.d_model, dtype),
+        "layers": stack_layer_params(one, km, cfg.n_layers),
+        "shared": shared,
+        "ln_f": rmsnorm_init(cfg.d_model, dtype),
+        "unembed": dense_init(ku, cfg.d_model, cfg.vocab, dtype),
+    }
+
+
+def n_shared_invocations(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.shared_attn_every
+
+
+def _shared_block(cfg, sp, x, x0, positions, kv_slice, cache_len):
+    """Concat(hidden, embeds) -> shared attn + MLP -> proj back to d."""
+    d2 = 2 * cfg.d_model
+    cat = jnp.concatenate([x, x0], axis=-1)
+    h, new_kv = attn_apply(
+        sp["attn"], rmsnorm(sp["ln1"], cat), cfg.numerics,
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=d2 // cfg.n_heads,
+        positions=positions, rope_theta=cfg.rope_theta,
+        kv_cache=kv_slice, cache_len=cache_len,
+    )
+    cat = cat + h
+    cat = cat + mlp_apply(sp["mlp"], rmsnorm(sp["ln2"], cat), cfg.numerics, cfg.act)
+    return x + dense(cat, sp["out_proj"], cfg.numerics), new_kv
+
+
+def _scan_group(cfg, group_params, x, caches):
+    """Scan a stacked group of mamba layers.  caches: pytree [G,...] or None."""
+    def body(x, scanned):
+        if caches is None:
+            lp, c = scanned, None
+        else:
+            lp, c = scanned
+        h, new_c = mamba2_apply(lp["mamba"], rmsnorm(lp["ln"], x), cfg.numerics,
+                                cache=c, **_ssm_kw(cfg))
+        return constrain(x + h, "batch", None, None), new_c
+
+    xs = group_params if caches is None else (group_params, caches)
+    x, new_caches = jax.lax.scan(body, x, xs)
+    return x, new_caches
+
+
+def _slice_layers(params_layers, start, size):
+    return jax.tree.map(lambda a: jax.lax.slice_in_dim(a, start, start + size, axis=0), params_layers)
+
+
+def hybrid_backbone(cfg: ModelConfig, params, embeds, positions, caches=None, cache_len=None):
+    """caches: None (training) or dict with 'ssm' pytree [L,...],
+    'shared_k'/'shared_v' [n_inv, B, S, kv, hd2]."""
+    x = constrain(embeds, "batch", None, None)
+    x0 = embeds
+    every = cfg.shared_attn_every
+    n_inv = n_shared_invocations(cfg)
+    new_ssm, new_k, new_v = [], [], []
+    layer = 0
+    for inv in range(n_inv):
+        gp = _slice_layers(params["layers"], layer, every)
+        gc = None if caches is None else jax.tree.map(
+            lambda a: jax.lax.slice_in_dim(a, layer, layer + every, axis=0), caches["ssm"])
+        x, nc = _scan_group(cfg, gp, x, gc)
+        if caches is not None:
+            new_ssm.append(nc)
+        kv_slice = None if caches is None else (caches["shared_k"][inv], caches["shared_v"][inv])
+        x, skv = _shared_block(cfg, params["shared"], x, x0, positions, kv_slice, cache_len)
+        if caches is not None:
+            new_k.append(skv[0])
+            new_v.append(skv[1])
+        layer += every
+    rem = cfg.n_layers - layer
+    if rem:
+        gp = _slice_layers(params["layers"], layer, rem)
+        gc = None if caches is None else jax.tree.map(
+            lambda a: jax.lax.slice_in_dim(a, layer, layer + rem, axis=0), caches["ssm"])
+        x, nc = _scan_group(cfg, gp, x, gc)
+        if caches is not None:
+            new_ssm.append(nc)
+    x = rmsnorm(params["ln_f"], x)
+    if caches is None:
+        return x, None
+    new_caches = {
+        "ssm": jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *new_ssm),
+        "shared_k": jnp.stack(new_k),
+        "shared_v": jnp.stack(new_v),
+    }
+    return x, new_caches
+
+
+def cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    one = mamba2_cache_init(batch, cfg.d_model, expand=cfg.ssm_expand,
+                            head_dim=cfg.ssm_head_dim, d_state=cfg.ssm_state,
+                            d_conv=cfg.ssm_conv, dtype=dtype)
+    ssm = jax.tree.map(lambda a: jnp.broadcast_to(a[None], (cfg.n_layers, *a.shape)).copy(), one)
+    n_inv = n_shared_invocations(cfg)
+    hd2 = 2 * cfg.d_model // cfg.n_heads
+    kv_shape = (n_inv, batch, max_len, cfg.n_kv, hd2)
+    return {"ssm": ssm, "shared_k": jnp.zeros(kv_shape, dtype), "shared_v": jnp.zeros(kv_shape, dtype)}
+
+
+def train_loss(cfg: ModelConfig, params, batch):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.act_dtype))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    hidden, _ = hybrid_backbone(cfg, params, x, positions)
+    return lm_loss_chunked(cfg, {"unembed": params["unembed"]}, hidden, batch["labels"])
+
+
+def prefill(cfg: ModelConfig, params, tokens, caches):
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.act_dtype))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    hidden, new_caches = hybrid_backbone(cfg, params, x, positions, caches, jnp.int32(0))
+    logits = dense(hidden[:, -1:, :], params["unembed"], cfg.numerics)
+    return logits, new_caches
+
+
+def decode_step(cfg: ModelConfig, params, token, caches, cache_len):
+    b = token.shape[0]
+    x = params["embed"][token].astype(jnp.dtype(cfg.act_dtype))
+    positions = jnp.broadcast_to(cache_len + jnp.zeros((b, 1), jnp.int32), (b, 1))
+    hidden, new_caches = hybrid_backbone(cfg, params, x, positions, caches, cache_len)
+    logits = dense(hidden, params["unembed"], cfg.numerics)
+    return logits, new_caches

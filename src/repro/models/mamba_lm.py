@@ -1,0 +1,82 @@
+"""Attention-free Mamba2 LM (mamba2-780m)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.dense import dense, dense_init
+from repro.parallel.sharding import constrain
+
+from .common import embed_init, rmsnorm, rmsnorm_init, stack_layer_params
+from .ssm import mamba2_apply, mamba2_cache_init, mamba2_init
+from .transformer import lm_loss_chunked
+
+
+def _kw(cfg: ModelConfig):
+    return dict(expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim,
+                d_state=cfg.ssm_state, chunk=cfg.ssm_chunk)
+
+
+def mamba_lm_init(cfg: ModelConfig, key):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, km, ku = jax.random.split(key, 3)
+
+    def one(k):
+        return {
+            "ln": rmsnorm_init(cfg.d_model, dtype),
+            "mamba": mamba2_init(k, cfg.d_model, expand=cfg.ssm_expand,
+                                 head_dim=cfg.ssm_head_dim, d_state=cfg.ssm_state,
+                                 d_conv=cfg.ssm_conv, dtype=dtype),
+        }
+
+    return {
+        "embed": embed_init(ke, cfg.vocab, cfg.d_model, dtype),
+        "layers": stack_layer_params(one, km, cfg.n_layers),
+        "ln_f": rmsnorm_init(cfg.d_model, dtype),
+        "unembed": dense_init(ku, cfg.d_model, cfg.vocab, dtype),
+    }
+
+
+def backbone(cfg: ModelConfig, params, embeds, caches=None):
+    x = constrain(embeds, "batch", None, None)
+
+    def body(x, scanned):
+        if caches is None:
+            lp, c = scanned, None
+        else:
+            lp, c = scanned
+        h, nc = mamba2_apply(lp["mamba"], rmsnorm(lp["ln"], x), cfg.numerics, cache=c, **_kw(cfg))
+        return constrain(x + h, "batch", None, None), nc
+
+    xs = params["layers"] if caches is None else (params["layers"], caches)
+    x, new_caches = jax.lax.scan(body, x, xs)
+    return rmsnorm(params["ln_f"], x), (None if caches is None else new_caches)
+
+
+def train_loss(cfg: ModelConfig, params, batch):
+    x = params["embed"][batch["tokens"]].astype(jnp.dtype(cfg.act_dtype))
+    hidden, _ = backbone(cfg, params, x)
+    return lm_loss_chunked(cfg, {"unembed": params["unembed"]}, hidden, batch["labels"])
+
+
+def cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    one = mamba2_cache_init(batch, cfg.d_model, expand=cfg.ssm_expand,
+                            head_dim=cfg.ssm_head_dim, d_state=cfg.ssm_state,
+                            d_conv=cfg.ssm_conv, dtype=dtype)
+    return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (cfg.n_layers, *a.shape)).copy(), one)
+
+
+def prefill(cfg: ModelConfig, params, tokens, caches):
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.act_dtype))
+    hidden, new_caches = backbone(cfg, params, x, caches)
+    logits = dense(hidden[:, -1:, :], params["unembed"], cfg.numerics)
+    return logits, new_caches
+
+
+def decode_step(cfg: ModelConfig, params, token, caches, cache_len):
+    del cache_len  # SSM state is position-free
+    x = params["embed"][token].astype(jnp.dtype(cfg.act_dtype))
+    hidden, new_caches = backbone(cfg, params, x, caches)
+    logits = dense(hidden, params["unembed"], cfg.numerics)
+    return logits, new_caches

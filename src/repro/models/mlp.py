@@ -1,0 +1,33 @@
+"""Gated / plain MLP blocks, numerics-aware."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dense import dense, dense_init
+from repro.core.modes import NumericsConfig
+
+ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),  # nemotron/minitron
+}
+
+
+def mlp_init(key, d: int, d_ff: int, glu: bool, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"wu": dense_init(k1, d, d_ff, dtype), "wd": dense_init(k2, d_ff, d, dtype)}
+    if glu:
+        p["wg"] = dense_init(k3, d, d_ff, dtype)
+    return p
+
+
+def mlp_apply(p, x, ncfg: NumericsConfig, act: str = "silu"):
+    fn = ACTS[act]
+    up = dense(x, p["wu"], ncfg)
+    if "wg" in p:
+        up = fn(dense(x, p["wg"], ncfg)) * up
+    else:
+        up = fn(up)
+    return dense(up, p["wd"], ncfg)

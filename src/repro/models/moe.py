@@ -1,0 +1,130 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-based dispatch.
+
+Deployment-grade dropping MoE (MaxText-style): tokens are scattered
+into per-expert capacity buffers (overflow dropped), experts run as
+stacked matmuls (sharded over the `model` mesh axis = expert
+parallelism), and results are combined with the gate probabilities.
+Router logits/gates stay in exact f32 (routing is control flow); the
+expert FFN matmuls are numerics-aware (PLAM / posit-quant).
+
+Supports DeepSeekMoE-style shared experts (always-on) alongside the
+routed ones.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dense import dense_init
+from repro.core.modes import NumericsConfig, nmatmul
+
+from .mlp import ACTS, mlp_apply, mlp_init
+
+
+def moe_init(key, d: int, n_experts: int, moe_d_ff: int, n_shared: int, shared_d_ff: int, glu: bool, dtype=jnp.float32):
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    def einit(k, i, o):
+        keys = jax.random.split(k, n_experts)
+        return jax.vmap(lambda kk: dense_init(kk, i, o, dtype))(keys)
+    p = {
+        "router": dense_init(kr, d, n_experts, jnp.float32),
+        "wg": einit(kg, d, moe_d_ff),
+        "wu": einit(ku, d, moe_d_ff),
+        "wd": einit(kd, moe_d_ff, d),
+    }
+    if n_shared:
+        p["shared"] = mlp_init(ks, d, shared_d_ff * n_shared, glu, dtype)
+    return p
+
+
+def _dispatch_group(xf, router_logits, ncfg, p, *, n_experts, top_k, cap, act):
+    """Capacity dispatch + expert FFNs + combine for ONE token group.
+
+    xf: [Tg, d].  All index math is group-local, so under vmap with the
+    group axis sharded over `batch` the scatter/gather never crosses
+    data shards (the cross-shard traffic becomes the expert einsum's
+    all-to-all, inserted by SPMD where expert parallelism demands it).
+    """
+    t, d = xf.shape
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gate, eid = jax.lax.top_k(probs, top_k)  # [Tg, K]
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    eid_f = eid.reshape(-1)  # [Tg*K]
+    oh = jax.nn.one_hot(eid_f, n_experts, dtype=jnp.int32)
+    pos = jnp.cumsum(oh, axis=0) - oh  # rank within expert, group-local
+    pos = jnp.take_along_axis(pos, eid_f[:, None], axis=-1)[:, 0]
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, cap - 1)
+
+    tok_idx = jnp.repeat(jnp.arange(t), top_k)
+    contrib = jnp.where(keep[:, None], xf[tok_idx], 0).astype(xf.dtype)
+    buf = jnp.zeros((n_experts, cap, d), xf.dtype).at[eid_f, pos_c].add(contrib)
+
+    fn = ACTS[act]
+
+    def expert(xe, wg, wu, wd):
+        up = nmatmul(xe, wu, ncfg, out_dtype=xe.dtype)
+        up = fn(nmatmul(xe, wg, ncfg, out_dtype=xe.dtype)) * up
+        return nmatmul(up, wd, ncfg, out_dtype=xe.dtype)
+
+    out_buf = jax.vmap(expert)(buf, p["wg"], p["wu"], p["wd"])  # [E, C, d]
+
+    gathered = out_buf[eid_f, pos_c]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    return (gathered.reshape(t, top_k, d) * gate[..., None].astype(xf.dtype)).sum(axis=1)
+
+
+def moe_apply(
+    p,
+    x,
+    ncfg: NumericsConfig,
+    *,
+    n_experts: int,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    act: str = "silu",
+    groups: int = 1,
+):
+    """x: [B, S, d] -> [B, S, d].
+
+    groups > 1 enables shard-local dispatch (set groups = the data-
+    parallel degree): capacity bookkeeping (cumsum/scatter/gather) stays
+    inside each data shard instead of spanning the global batch, which
+    removes the O(E*C_global*d) cross-shard all-reduces of the naive
+    dispatch (EXPERIMENTS.md §Perf, deepseek hillclimb).
+    """
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    logits = nmatmul(xf, p["router"], NumericsConfig(mode="f32"), out_dtype=jnp.float32)
+
+    g = groups if t % max(groups, 1) == 0 else 1
+    tg = t // g
+    cap = max(1, int(tg * top_k / n_experts * capacity_factor))
+
+    if g == 1:
+        combined = _dispatch_group(
+            xf, logits, ncfg, p, n_experts=n_experts, top_k=top_k, cap=cap, act=act)
+    else:
+        from repro.parallel.sharding import constrain
+
+        xg = constrain(xf.reshape(g, tg, d), "batch", None, None)
+        lg = constrain(logits.reshape(g, tg, n_experts), "batch", None, None)
+        combined = jax.vmap(
+            lambda xe, le: _dispatch_group(
+                xe, le, ncfg, p, n_experts=n_experts, top_k=top_k, cap=cap, act=act)
+        )(xg, lg)
+        combined = combined.reshape(t, d)
+
+    if "shared" in p:
+        combined = combined + mlp_apply(p["shared"], xf, ncfg, act)
+    return combined.reshape(b, s, d)
+
+
+def aux_load_balance_loss(logits, eid, n_experts: int):
+    """Switch-style load-balance auxiliary loss (mean prob x mean load)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    load = jnp.mean(jax.nn.one_hot(eid[..., 0], n_experts, dtype=jnp.float32), axis=0)
+    imp = jnp.mean(probs, axis=0)
+    return n_experts * jnp.sum(imp * load)

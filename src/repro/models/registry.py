@@ -1,0 +1,214 @@
+"""Uniform model API over all architecture families + dry-run input specs."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+from . import encdec as _encdec
+from . import hybrid as _hybrid
+from . import mamba_lm as _mamba
+from . import transformer as _tf
+
+VLM_PATCHES = 1024  # stub vision frontend: 32x32 patch grid (reduced: 16)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable
+    train_loss: Callable  # (params, batch) -> scalar loss
+    prefill: Callable  # (params, batch) -> (logits, caches)
+    decode_step: Callable  # (params, batch_with_caches) -> (logits, caches)
+    train_inputs: Callable  # (ShapeSpec) -> batch of ShapeDtypeStruct
+    prefill_inputs: Callable
+    decode_inputs: Callable
+
+
+def _patches(cfg: ModelConfig) -> int:
+    return VLM_PATCHES if cfg.d_model > 512 else 16
+
+
+def build(cfg: ModelConfig) -> ModelAPI:
+    fam = cfg.family
+    act_dt = jnp.dtype(cfg.act_dtype)
+    cache_dt = jnp.bfloat16
+
+    if fam in ("dense", "moe", "vlm"):
+        def init(key):
+            return _tf.lm_init(cfg, key)
+
+        def train_loss(params, batch):
+            return _tf.train_loss(cfg, params, batch)
+
+        def prefill(params, batch):
+            tokens = batch["tokens"]
+            b, s = tokens.shape
+            if fam == "vlm":
+                # patch embeddings occupy the prefix of the cache window
+                x = _tf.embed_tokens(cfg, params, tokens)
+                x = jnp.concatenate([batch["embeds_prefix"].astype(x.dtype), x], axis=1)
+                s_tot = x.shape[1]
+                caches = _tf.kv_cache_init(cfg, b, s_tot, cache_dt)
+                positions = _tf.default_positions(cfg, b, s_tot)
+                hidden, new_caches = _tf.lm_backbone(
+                    cfg, params, x, positions, kv_caches=caches, cache_len=jnp.int32(0))
+                logits = _tf.lm_logits(cfg, params, hidden[:, -1:, :])
+                return logits, new_caches
+            caches = _tf.kv_cache_init(cfg, b, s, cache_dt)
+            return _tf.prefill(cfg, params, tokens, caches)
+
+        def decode_step(params, batch):
+            return _tf.decode_step(
+                cfg, params, batch["token"], batch["kv_caches"], batch["cache_len"])
+
+        def train_inputs(shape: ShapeSpec):
+            b, s = shape.global_batch, shape.seq_len
+            if fam == "vlm":
+                p = _patches(cfg)
+                return {
+                    "tokens": _sds((b, s - p), jnp.int32),
+                    "labels": _sds((b, s - p), jnp.int32),
+                    "embeds_prefix": _sds((b, p, cfg.d_model), act_dt),
+                }
+            return {"tokens": _sds((b, s), jnp.int32), "labels": _sds((b, s), jnp.int32)}
+
+        def prefill_inputs(shape: ShapeSpec):
+            b, s = shape.global_batch, shape.seq_len
+            if fam == "vlm":
+                p = _patches(cfg)
+                return {
+                    "tokens": _sds((b, s - p), jnp.int32),
+                    "embeds_prefix": _sds((b, p, cfg.d_model), act_dt),
+                }
+            return {"tokens": _sds((b, s), jnp.int32)}
+
+        def decode_inputs(shape: ShapeSpec):
+            b, s = shape.global_batch, shape.seq_len
+            kv = (cfg.n_layers, b, s, cfg.n_kv, cfg.hd)
+            return {
+                "token": _sds((b, 1), jnp.int32),
+                "kv_caches": (_sds(kv, cache_dt), _sds(kv, cache_dt)),
+                "cache_len": _sds((), jnp.int32),
+            }
+
+    elif fam == "ssm":
+        def init(key):
+            return _mamba.mamba_lm_init(cfg, key)
+
+        def train_loss(params, batch):
+            return _mamba.train_loss(cfg, params, batch)
+
+        def prefill(params, batch):
+            tokens = batch["tokens"]
+            caches = _mamba.cache_init(cfg, tokens.shape[0], 0, cache_dt)
+            return _mamba.prefill(cfg, params, tokens, caches)
+
+        def decode_step(params, batch):
+            return _mamba.decode_step(cfg, params, batch["token"], batch["caches"], batch["cache_len"])
+
+        def train_inputs(shape: ShapeSpec):
+            b, s = shape.global_batch, shape.seq_len
+            return {"tokens": _sds((b, s), jnp.int32), "labels": _sds((b, s), jnp.int32)}
+
+        def prefill_inputs(shape: ShapeSpec):
+            return {"tokens": _sds((shape.global_batch, shape.seq_len), jnp.int32)}
+
+        def decode_inputs(shape: ShapeSpec):
+            b = shape.global_batch
+            caches = jax.eval_shape(lambda: _mamba.cache_init(cfg, b, 0, cache_dt))
+            return {"token": _sds((b, 1), jnp.int32), "caches": caches,
+                    "cache_len": _sds((), jnp.int32)}
+
+    elif fam == "hybrid":
+        def init(key):
+            return _hybrid.hybrid_init(cfg, key)
+
+        def train_loss(params, batch):
+            return _hybrid.train_loss(cfg, params, batch)
+
+        def prefill(params, batch):
+            tokens = batch["tokens"]
+            caches = _hybrid.cache_init(cfg, tokens.shape[0], tokens.shape[1], cache_dt)
+            return _hybrid.prefill(cfg, params, tokens, caches)
+
+        def decode_step(params, batch):
+            return _hybrid.decode_step(cfg, params, batch["token"], batch["caches"], batch["cache_len"])
+
+        def train_inputs(shape: ShapeSpec):
+            b, s = shape.global_batch, shape.seq_len
+            return {"tokens": _sds((b, s), jnp.int32), "labels": _sds((b, s), jnp.int32)}
+
+        def prefill_inputs(shape: ShapeSpec):
+            return {"tokens": _sds((shape.global_batch, shape.seq_len), jnp.int32)}
+
+        def decode_inputs(shape: ShapeSpec):
+            b, s = shape.global_batch, shape.seq_len
+            caches = jax.eval_shape(lambda: _hybrid.cache_init(cfg, b, s, cache_dt))
+            return {"token": _sds((b, 1), jnp.int32), "caches": caches,
+                    "cache_len": _sds((), jnp.int32)}
+
+    elif fam == "encdec":
+        tgt_len = 4096
+
+        def init(key):
+            return _encdec.encdec_init(cfg, key)
+
+        def train_loss(params, batch):
+            return _encdec.train_loss(cfg, params, batch)
+
+        def prefill(params, batch):
+            tokens = batch["tokens"]
+            caches = _encdec.kv_cache_init(cfg, tokens.shape[0], tokens.shape[1], cache_dt)
+            return _encdec.prefill(cfg, params, batch["frames"], tokens, caches)
+
+        def decode_step(params, batch):
+            return _encdec.decode_step(
+                cfg, params, batch["token"], batch["enc_out"], batch["kv_caches"], batch["cache_len"])
+
+        def _tgt(s):
+            return min(s, tgt_len) if cfg.d_model > 512 else min(s, 64)
+
+        def train_inputs(shape: ShapeSpec):
+            b, s = shape.global_batch, shape.seq_len
+            t = _tgt(s)
+            return {
+                "frames": _sds((b, s, cfg.frontend_dim), act_dt),
+                "tokens": _sds((b, t), jnp.int32),
+                "labels": _sds((b, t), jnp.int32),
+            }
+
+        def prefill_inputs(shape: ShapeSpec):
+            b, s = shape.global_batch, shape.seq_len
+            return {
+                "frames": _sds((b, s, cfg.frontend_dim), act_dt),
+                "tokens": _sds((b, _tgt(s)), jnp.int32),
+            }
+
+        def decode_inputs(shape: ShapeSpec):
+            b, s = shape.global_batch, shape.seq_len
+            t = _tgt(s)
+            kv = (cfg.dec_layers, b, t, cfg.n_kv, cfg.hd)
+            return {
+                "token": _sds((b, 1), jnp.int32),
+                "enc_out": _sds((b, s, cfg.d_model), act_dt),
+                "kv_caches": (_sds(kv, cache_dt), _sds(kv, cache_dt)),
+                "cache_len": _sds((), jnp.int32),
+            }
+
+    else:  # pragma: no cover
+        raise ValueError(fam)
+
+    return ModelAPI(
+        cfg=cfg, init=init, train_loss=train_loss, prefill=prefill,
+        decode_step=decode_step, train_inputs=train_inputs,
+        prefill_inputs=prefill_inputs, decode_inputs=decode_inputs,
+    )

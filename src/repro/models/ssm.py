@@ -1,0 +1,192 @@
+"""Mamba2 (State Space Duality) block — TPU-native chunked SSD.
+
+The SSD recurrence  S_t = a_t S_{t-1} + dt_t (B_t ⊗ x_t),
+y_t = C_t^T S_t + D x_t  is evaluated with the chunked algorithm of the
+Mamba2 paper: within a chunk the contribution is a (masked, decayed)
+attention-like matmul (MXU-friendly); across chunks a short lax.scan
+carries the [ds, hd] state.  This is the TPU adaptation: the quadratic
+intra-chunk term rides the MXU, and the sequential part is S/Q steps
+instead of S.
+
+Single-token decode uses the O(1) recurrence directly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dense import dense, dense_init
+from repro.core.modes import NumericsConfig
+
+from .common import rmsnorm, rmsnorm_init
+
+
+def mamba2_dims(d_model: int, expand: int, head_dim: int, d_state: int):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    return d_inner, n_heads
+
+
+def mamba2_init(key, d_model: int, *, expand: int, head_dim: int, d_state: int, d_conv: int, dtype=jnp.float32):
+    di, nh = mamba2_dims(d_model, expand, head_dim, d_state)
+    conv_dim = di + 2 * d_state
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        # order: [z (di), x (di), B (ds), C (ds), dt (nh)]
+        "in_proj": dense_init(k1, d_model, 2 * di + 2 * d_state + nh, dtype),
+        "conv_w": (jax.random.normal(k2, (d_conv, conv_dim), jnp.float32) * (d_conv ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),  # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),  # softplus(-2) ~ 0.13
+        "norm": rmsnorm_init(di, dtype),
+        "out_proj": dense_init(k3, di, d_model, dtype),
+    }
+
+
+def _causal_dwconv(x, w, b):
+    """Depthwise causal conv1d.  x: [B,S,C], w: [K,C]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32),
+        w.astype(jnp.float32)[:, None, :],  # [K, 1, C]
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=w.shape[1],
+    )
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _ssd_chunked(xh, bs, cs, dt, a_log, chunk: int):
+    """Chunked SSD scan.
+
+    xh: [B,S,H,hd] (head-split inner activations)
+    bs, cs: [B,S,ds] (shared across heads, ngroups=1)
+    dt: [B,S,H] f32 (post-softplus)
+    returns y: [B,S,H,hd], final state [B,H,ds,hd]
+    """
+    b, s, h, hd = xh.shape
+    ds = bs.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        # dt=0 padding is exact: a = exp(0) = 1 preserves the state and
+        # dt*x = 0 adds nothing; padded outputs are sliced off below.
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bs = jnp.pad(bs, ((0, 0), (0, pad), (0, 0)))
+        cs = jnp.pad(cs, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    s_pad = s + pad
+    nc = s_pad // q
+
+    loga = (-jnp.exp(a_log)[None, None, :] * dt).astype(jnp.float32)  # [B,S,H] log a_t
+    dtx = (xh.astype(jnp.float32) * dt[..., None]).astype(jnp.float32)
+
+    def r(x, tail):  # [B,S_pad,...] -> [nc, B, q, ...]
+        return x.reshape(b, nc, q, *tail).transpose(1, 0, 2, *range(3, 3 + len(tail)))
+
+    la_c = r(loga, (h,))           # [nc,B,q,H]
+    dtx_c = r(dtx, (h, hd))        # [nc,B,q,H,hd]
+    b_c = r(bs.astype(jnp.float32), (ds,))  # [nc,B,q,ds]
+    c_c = r(cs.astype(jnp.float32), (ds,))
+
+    cum = jnp.cumsum(la_c, axis=2)  # inclusive cumsum of log a within chunk
+
+    # intra-chunk: masked decayed attention-like term
+    g = jnp.einsum("nbqs,nbks->nbqk", c_c, b_c)  # [nc,B,q,q]
+    dec = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [nc,B,q,k,H]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    m = jnp.where(mask[None, None, :, :, None], jnp.exp(dec), 0.0)
+    y_intra = jnp.einsum("nbqk,nbqkh,nbkhd->nbqhd", g, m, dtx_c)
+
+    # chunk summaries: state contribution of each chunk
+    dec_end = jnp.exp(cum[:, :, -1:, :] - cum)  # decay from pos k to chunk end
+    s_chunk = jnp.einsum("nbks,nbkh,nbkhd->nbhsd", b_c, dec_end, dtx_c)  # [nc,B,H,ds,hd]
+    a_chunk = jnp.exp(cum[:, :, -1, :])  # [nc,B,H] total chunk decay
+
+    def step(hstate, inp):
+        s_c, a_c, c_blk, cum_blk = inp
+        # y_inter from the carried state
+        dec_in = jnp.exp(cum_blk)  # [B,q,H] decay from chunk start to pos q
+        y_int = jnp.einsum("bqs,bhsd,bqh->bqhd", c_blk, hstate, dec_in)
+        hnew = a_c[..., None, None] * hstate + s_c
+        return hnew, y_int
+
+    h0 = jnp.zeros((b, h, ds, hd), jnp.float32)
+    hfin, y_inter = jax.lax.scan(step, h0, (s_chunk, a_chunk, c_c, cum))
+
+    y = y_intra + y_inter  # [nc,B,q,H,hd]
+    y = y.transpose(1, 0, 2, 3, 4).reshape(b, s_pad, h, hd)
+    return y[:, :s], hfin
+
+
+def mamba2_apply(
+    p,
+    x,
+    ncfg: NumericsConfig,
+    *,
+    expand: int,
+    head_dim: int,
+    d_state: int,
+    chunk: int,
+    cache=None,
+):
+    """x: [B,S,d].  Training/prefill when cache is None; otherwise a
+    single-token decode step with cache = {"h": [B,H,ds,hd],
+    "conv": [B,K-1,conv_dim]}.  Returns (out, new_cache_or_final_state).
+    """
+    bsz, s, d_model = x.shape
+    di, nh = mamba2_dims(d_model, expand, head_dim, d_state)
+    proj = dense(x, p["in_proj"], ncfg)
+    z, xin, bsv, csv, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + d_state, 2 * di + 2 * d_state], axis=-1
+    )
+    conv_in = jnp.concatenate([xin, bsv, csv], axis=-1)
+
+    # Single-token recurrence only when decoding (s == 1 with a cache);
+    # prefill (s > 1) always runs the chunked scan from a fresh state.
+    decode_1 = cache is not None and s == 1
+    if not decode_1:
+        conv_out = _causal_dwconv(conv_in, p["conv_w"], p["conv_b"])
+        conv_tail = conv_in[:, -(p["conv_w"].shape[0] - 1):, :]
+    else:
+        hist = jnp.concatenate([cache["conv"], conv_in], axis=1)  # [B,K,cd]
+        conv_out = jnp.einsum(
+            "bkc,kc->bc", hist.astype(jnp.float32), p["conv_w"].astype(jnp.float32)
+        )[:, None, :] + p["conv_b"].astype(jnp.float32)
+        conv_out = conv_out.astype(x.dtype)
+        conv_tail = hist[:, 1:, :]
+
+    conv_out = jax.nn.silu(conv_out)
+    xc, bc, cc = jnp.split(conv_out, [di, di + d_state], axis=-1)
+    xh = xc.reshape(bsz, -1, nh, head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+
+    if not decode_1:
+        y, hfin = _ssd_chunked(xh, bc, cc, dt, p["A_log"], chunk)
+    else:
+        # O(1) single-step recurrence
+        a = jnp.exp(-jnp.exp(p["A_log"])[None, :] * dt[:, 0, :])  # [B,H]
+        dbx = jnp.einsum(
+            "bs,bhd->bhsd", bc[:, 0].astype(jnp.float32),
+            xh[:, 0].astype(jnp.float32) * dt[:, 0, :, None],
+        )
+        hfin = a[..., None, None] * cache["h"] + dbx
+        y = jnp.einsum("bs,bhsd->bhd", cc[:, 0].astype(jnp.float32), hfin)[:, None]
+
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = dense(y, p["out_proj"], ncfg)
+    new_cache = {"h": hfin, "conv": conv_tail}
+    return out, new_cache
+
+
+def mamba2_cache_init(batch: int, d_model: int, *, expand: int, head_dim: int, d_state: int, d_conv: int, dtype=jnp.float32):
+    di, nh = mamba2_dims(d_model, expand, head_dim, d_state)
+    return {
+        "h": jnp.zeros((batch, nh, d_state, head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, d_conv - 1, di + 2 * d_state), dtype),
+    }

@@ -1,0 +1,177 @@
+"""PLAM — Posit Logarithm-Approximate Multiplication (paper Sec. III).
+
+Three equivalent implementations of the paper's multiplier, plus the
+exact posit multiplier it replaces:
+
+* :func:`plam_mul`        — field-equation path, eqs. (14)-(21).
+* :func:`plam_mul_logfix` — the Fig. 4 hardware path: concatenate
+  regime|exponent|fraction into one fixed-point log word, add, re-encode.
+  (Demonstrated for n <= 16 where the word fits 32 bits; for wider
+  posits the field path is the same algebra split across two words.)
+* :func:`plam_product_f32` — PLAM product decoded straight to linear
+  float32 *without* re-encoding, for EMAC-style linear accumulation in
+  dot products.  This is the TPU-native trick: Mitchell's antilogarithm
+  is exactly the IEEE-754 bit layout, so the entire product is one
+  integer add plus a bitcast.
+* :func:`exact_mul`       — eqs. (3)-(10), bit-exact for n <= 16.
+
+Error analysis utilities implement eq. (24) (max relative error 1/9).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .posit import I32, U32, PositSpec, decode_fields, encode_fields, _shl
+
+__all__ = [
+    "plam_mul",
+    "plam_mul_logfix",
+    "plam_product_f32",
+    "exact_mul",
+    "mitchell_mul_f32",
+    "plam_relative_error",
+]
+
+
+def _special(cand, a_bits, b_bits, spec, az, an, bz, bn):
+    """Fold zero/NaR handling into a computed pattern."""
+    out = jnp.where(az | bz, I32(0), cand)
+    out = jnp.where(an | bn, I32(spec.nar), out)
+    return out
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def plam_mul(a_bits, b_bits, spec: PositSpec):
+    """PLAM product of two posit patterns -> posit pattern (eqs. 14-21)."""
+    fb = spec.fbmax
+    sa, ca, fa, az, an = decode_fields(a_bits, spec)
+    sb, cb, fbr, bz, bn = decode_fields(b_bits, spec)
+    s = sa ^ sb                                   # eq. (14)
+    fsum = fa + fbr                               # eq. (17): product -> sum
+    carry = fsum >> I32(fb)                       # eqs. (19)-(21) overflow
+    frac = fsum & I32((1 << fb) - 1)
+    scale = ca + cb + carry                       # eqs. (15)-(16) + carry
+    cand = encode_fields(s, scale, frac.astype(U32), fb, spec)
+    return _special(cand, a_bits, b_bits, spec, az, an, bz, bn)
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def plam_mul_logfix(a_bits, b_bits, spec: PositSpec):
+    """PLAM via the Fig. 4 hardware datapath (single log-fixed word).
+
+    log2|X| ~= (k*2^es + e) + f  ==  (scale << fb) | frac  as a fixed
+    point integer with fb fractional bits.  The multiplication is ONE
+    integer addition of these words; the carry out of the fraction
+    propagates into exponent/regime automatically — exactly the point
+    of the paper's hardware design.
+    """
+    fb = spec.fbmax
+    # scale range * 2^fb must fit int32
+    assert (2 * spec.max_scale + 2) < (1 << (30 - fb)), "logfix word overflow"
+    sa, ca, fa, az, an = decode_fields(a_bits, spec)
+    sb, cb, fbr, bz, bn = decode_fields(b_bits, spec)
+    la = (ca << I32(fb)) | fa
+    lb = (cb << I32(fb)) | fbr
+    lsum = la + lb                                # the whole multiplier
+    scale = lsum >> I32(fb)                       # arithmetic shift: floor
+    frac = (lsum & I32((1 << fb) - 1)).astype(U32)
+    cand = encode_fields(sa ^ sb, scale, frac, fb, spec)
+    return _special(cand, a_bits, b_bits, spec, az, an, bz, bn)
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def plam_product_f32(a_bits, b_bits, spec: PositSpec):
+    """PLAM product decoded directly to linear float32 (no re-encode).
+
+    Used for EMAC/Johnson-style dot products: products are antilogged
+    and accumulated in linear f32.  Mitchell's antilog of the summed
+    log-fixed word IS the f32 bit layout: exponent <- integer part,
+    mantissa <- fractional part.  Integer add + bitcast, no multiplier.
+    """
+    fb = spec.fbmax
+    sa, ca, fa, az, an = decode_fields(a_bits, spec)
+    sb, cb, fbr, bz, bn = decode_fields(b_bits, spec)
+    s = (sa ^ sb).astype(U32)
+    fsum = fa + fbr
+    carry = fsum >> I32(fb)
+    frac = (fsum & I32((1 << fb) - 1)).astype(U32)
+    scale = ca + cb + carry
+    scale = jnp.clip(scale, -126, 127)  # f32-representable (posit32 tails saturate)
+    if fb <= 23:
+        mant = frac << U32(23 - fb)
+    else:
+        mant = frac >> U32(fb - 23)
+    bits32 = (s << U32(31)) | ((scale + I32(127)).astype(U32) << U32(23)) | mant
+    val = jax.lax.bitcast_convert_type(bits32, jnp.float32)
+    val = jnp.where(az | bz | an | bn, jnp.float32(0), val)  # NaR excluded upstream
+    return val
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def exact_mul(a_bits, b_bits, spec: PositSpec):
+    """Exact posit multiplication (eqs. 3-10), bit-exact RNE, n <= 16.
+
+    The fraction product (1+fa)(1+fb) needs 2*fbmax+2 bits; together
+    with the es bits in the rounding word this must fit 32 bits, which
+    holds for n <= 16.  (Wider exact multiplication is provided by the
+    float64 golden reference; PLAM itself — the paper's contribution —
+    never needs the wide product, which is exactly its hardware point.)
+    """
+    fb = spec.fbmax
+    assert 2 * fb + 1 + spec.es <= 30, "exact_mul supports n <= 16"
+    sa, ca, fa, az, an = decode_fields(a_bits, spec)
+    sb, cb, fbr, bz, bn = decode_fields(b_bits, spec)
+    s = sa ^ sb
+    one = I32(1 << fb)
+    prod = (one | fa) * (one | fbr)               # eq. (6), in [2^2fb, 2^(2fb+2))
+    ovf = (prod >> I32(2 * fb + 1)) & I32(1)      # product >= 2 ?
+    scale = ca + cb + ovf                         # eqs. (4),(5),(8),(9)
+    # Normalize to a uniform 2fb+1-bit fraction (hidden bit stripped);
+    # the no-overflow case gains a zero low bit — value-preserving.
+    frac = jnp.where(
+        ovf == 1,
+        prod - I32(1 << (2 * fb + 1)),
+        _shl((prod - I32(1 << (2 * fb))).astype(U32), jnp.full_like(prod, 1)).astype(I32),
+    ).astype(U32)
+    cand = encode_fields(s, scale, frac, 2 * fb + 1, spec)
+    return _special(cand, a_bits, b_bits, spec, az, an, bz, bn)
+
+
+@jax.jit
+def mitchell_mul_f32(a, b):
+    """Float-domain Mitchell multiplier (the Cheng et al. [20] baseline).
+
+    Treats the f32 exponent|mantissa bits as a fixed-point log2: the
+    approximate product is (bits_a - BIAS) + (bits_b - BIAS) + BIAS,
+    bitcast back, with the sign handled by XOR.  Used as the
+    floating-point counterpart PLAM is compared against.
+    """
+    bias = U32(127 << 23)
+    ba = jax.lax.bitcast_convert_type(a.astype(jnp.float32), U32)
+    bb = jax.lax.bitcast_convert_type(b.astype(jnp.float32), U32)
+    s = (ba ^ bb) & U32(0x80000000)
+    la = ba & U32(0x7FFFFFFF)
+    lb = bb & U32(0x7FFFFFFF)
+    lc = la + lb - bias
+    out = jax.lax.bitcast_convert_type(s | lc, jnp.float32)
+    return jnp.where((la == 0) | (lb == 0), jnp.float32(0), out)
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def plam_relative_error(a_bits, b_bits, spec: PositSpec):
+    """Analytic relative error of PLAM, eq. (24) — depends only on fractions."""
+    fb = spec.fbmax
+    _, _, fa, _, _ = decode_fields(a_bits, spec)
+    _, _, fbr, _, _ = decode_fields(b_bits, spec)
+    fa = fa.astype(jnp.float32) / (1 << fb)
+    fbv = fbr.astype(jnp.float32) / (1 << fb)
+    no_carry = fa + fbv < 1.0
+    err = jnp.where(
+        no_carry,
+        fa * fbv / ((1 + fa) * (1 + fbv)),
+        (1 - fa) * (1 - fbv) / ((1 + fa) * (1 + fbv)),
+    )
+    return err

@@ -1,0 +1,70 @@
+"""Exhaustive-table Posit codec for n <= 16.
+
+Independent of the bit-twiddling codec in ``posit.py``: tables are built
+from the pure-Python golden decoder, and rounding is value-space
+nearest-with-ties-to-even-pattern.  For posits these two formulations
+(pattern-space RNE vs value-space nearest) coincide — the tests assert
+agreement between this codec and ``posit.py`` as a strong invariant.
+"""
+from __future__ import annotations
+
+from functools import lru_cache, partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .golden import all_values, thresholds
+from .posit import I32, PositSpec
+
+__all__ = ["decode_table", "encode_table", "tables"]
+
+
+@lru_cache(maxsize=8)
+def tables(n: int, es: int):
+    """(values f32, rounding thresholds f32) for positive bodies 1..maxpos.
+
+    Thresholds are the pattern-RNE boundaries (odd (n+1)-bit posits),
+    exact in f32 since they carry <= n-1 significand bits.
+    """
+    assert n <= 16, "exhaustive tables are for n <= 16"
+    vals = np.asarray(all_values(n, es), dtype=np.float64)
+    mids = np.asarray(thresholds(n, es), dtype=np.float64)
+    # numpy (not jnp) so the lru_cache never captures tracers
+    return vals.astype(np.float32), mids.astype(np.float32)
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def decode_table(bits, spec: PositSpec):
+    vals_np, _ = tables(spec.n, spec.es)
+    vals = jnp.asarray(vals_np)
+    u = bits.astype(jnp.uint32) & jnp.uint32(spec.mask_n)
+    sign = (u >> jnp.uint32(spec.n - 1)) != 0
+    mag = jnp.where(sign, (jnp.uint32(0) - u) & jnp.uint32(spec.mask_n), u)
+    body = (mag & jnp.uint32(spec.maxpos_body)).astype(I32)
+    v = vals[jnp.clip(body - 1, 0, vals.shape[0] - 1)]
+    v = jnp.where(sign, -v, v)
+    v = jnp.where(u == 0, jnp.float32(0), v)
+    v = jnp.where(u == jnp.uint32(spec.nar), jnp.float32(jnp.nan), v)
+    return v
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def encode_table(x, spec: PositSpec):
+    """float32 -> posit pattern via midpoint binary search."""
+    vals_np, mids_np = tables(spec.n, spec.es)
+    vals, mids = jnp.asarray(vals_np), jnp.asarray(mids_np)
+    x32 = x.astype(jnp.float32)
+    a = jnp.abs(x32)
+    sign = jnp.signbit(x32)
+    j = jnp.searchsorted(mids, a, side="left").astype(I32)
+    # mids[j-1] < a <= mids[j]  ->  candidate body j+1 (vals[j]);
+    # exact tie a == mids[j] -> even pattern among bodies {j+1, j+2}.
+    tie = a == mids[jnp.clip(j, 0, mids.shape[0] - 1)]
+    body = j + 1
+    body = jnp.where(tie & (body % 2 == 1), body + 1, body)
+    body = jnp.clip(body, 1, spec.maxpos_body)
+    pat = jnp.where(sign, (jnp.uint32(0) - body.astype(jnp.uint32)) & jnp.uint32(spec.mask_n), body.astype(jnp.uint32)).astype(I32)
+    pat = jnp.where(a == 0, I32(0), pat)
+    pat = jnp.where(jnp.isnan(x32) | jnp.isinf(x32), I32(spec.nar), pat)
+    return pat

@@ -1,0 +1,117 @@
+"""Optimizers (SGD / Nesterov / AdamW) as pure pytree transforms.
+
+The paper's experiments use SGD, Nesterov and Adam (Table I); AdamW is
+the default for the LM-scale runs.  Optimizer state sharding follows
+ZeRO-1: each state tensor inherits its parameter's TP sharding and is
+*additionally* sharded over the data axis on the first divisible
+replicated dimension (for scanned layers that is the [L] axis — an
+FSDP-over-layers layout), so per-device optimizer memory scales with
+1/(dp*tp).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.parallel.sharding import pspec, sanitize, spec_for_param, _path_str
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"  # adamw | adam | sgd | nesterov
+    lr: float = 1e-3
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    momentum: float = 0.9
+    grad_clip: float = 1.0
+
+
+def init_state(cfg: OptConfig, params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    if cfg.name in ("adam", "adamw"):
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+    if cfg.name in ("sgd", "nesterov"):
+        return {"mu": jax.tree.map(zeros, params), "step": jnp.zeros((), jnp.int32)}
+    raise ValueError(cfg.name)
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree)))
+
+
+def apply_updates(cfg: OptConfig, params, grads, state, lr_scale=1.0):
+    """Returns (new_params, new_state).  Gradients are clipped by global
+    norm; master math in f32, params cast back to their storage dtype."""
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-12))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+    step = state["step"] + 1
+    lr = cfg.lr * lr_scale
+
+    if cfg.name in ("adam", "adamw"):
+        b1, b2 = cfg.beta1, cfg.beta2
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+            if cfg.name == "adamw" and cfg.weight_decay:
+                u = u + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"m": m, "v": v, "step": step}
+
+    # SGD / Nesterov momentum
+    mu = jax.tree.map(lambda mu, g: cfg.momentum * mu + g, state["mu"], grads)
+    if cfg.name == "nesterov":
+        upd_tree = jax.tree.map(lambda g, mu: g + cfg.momentum * mu, grads, mu)
+    else:
+        upd_tree = mu
+    new_params = jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) - lr * u).astype(p.dtype), params, upd_tree
+    )
+    return new_params, {"mu": mu, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 sharding of optimizer state
+# ---------------------------------------------------------------------------
+
+def _zero1_dims(path: str, leaf, mesh: Mesh, rules=None):
+    dims = list(sanitize(mesh, spec_for_param(path, leaf.ndim, rules), leaf.shape))
+    if "data" in mesh.axis_names:
+        dsz = mesh.shape["data"]
+        for i, d in enumerate(dims):
+            if d is None and leaf.shape[i] % dsz == 0 and leaf.shape[i] >= dsz:
+                dims[i] = "seq"  # logical 'seq' resolves to the data axis
+                break
+    return tuple(dims)
+
+
+def state_shardings(cfg: OptConfig, mesh: Mesh, params, rules=None):
+    """NamedSharding pytree for init_state(params) under ZeRO-1."""
+
+    def shard_like_params(tree):
+        def one(path, leaf):
+            dims = _zero1_dims(_path_str(path), leaf, mesh, rules)
+            return NamedSharding(mesh, pspec(mesh, dims))
+        return jax.tree_util.tree_map_with_path(one, tree)
+
+    params_sh = shard_like_params(params)
+    scalar = NamedSharding(mesh, P())
+    if cfg.name in ("adam", "adamw"):
+        return {"m": params_sh, "v": params_sh, "step": scalar}
+    return {"mu": params_sh, "step": scalar}

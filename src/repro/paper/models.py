@@ -1,0 +1,158 @@
+"""The paper's own DNNs (Table I): 2-hidden-layer MLPs, LeNet-5, CifarNet.
+
+Every multiplication routes through the numerics-aware dense layer —
+convolutions are lowered to im2col + nmatmul, so PLAM applies to them
+exactly as the paper's SoftPosit-based emulation does.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dense import dense_init
+from repro.core.modes import NumericsConfig, nmatmul
+
+
+def _conv2d(x, w, ncfg: NumericsConfig, stride=1):
+    """x: [B,H,W,C]; w: [kh,kw,C,F] via im2col + numerics-aware matmul."""
+    kh, kw, c, f = w.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # [B, H', W', kh*kw*C]
+    b, ho, wo, _ = patches.shape
+    out = nmatmul(patches.reshape(b * ho * wo, -1), w.reshape(-1, f), ncfg,
+                  out_dtype=x.dtype)
+    return out.reshape(b, ho, wo, f)
+
+
+def _maxpool(x, k=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, k, k, 1), "VALID")
+
+
+# ---------------------------------------------------------------------------
+# MLPs (ISOLET / UCI-HAR rows of Table I)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, dims):
+    """dims e.g. (617, 128, 64, 26)."""
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        f"w{i}": dense_init(k, dims[i], dims[i + 1])
+        for i, k in enumerate(keys)
+    } | {f"b{i}": jnp.zeros((dims[i + 1],), jnp.float32) for i in range(len(dims) - 1)}
+
+
+def mlp_apply(params, x, ncfg: NumericsConfig):
+    n = sum(1 for k in params if k.startswith("w"))
+    h = x
+    for i in range(n):
+        h = nmatmul(h, params[f"w{i}"], ncfg, out_dtype=jnp.float32) + params[f"b{i}"]
+        if i < n - 1:
+            h = jax.nn.relu(h)
+    return h  # logits
+
+
+# ---------------------------------------------------------------------------
+# LeNet-5 (MNIST / SVHN rows)
+# ---------------------------------------------------------------------------
+
+def lenet5_init(key, in_ch=1, n_classes=10, hw=28):
+    k = jax.random.split(key, 5)
+    flat = (hw // 4) * (hw // 4) * 16
+    return {
+        "c1": dense_init(k[0], 5 * 5 * in_ch, 6).reshape(5, 5, in_ch, 6),
+        "c2": dense_init(k[1], 5 * 5 * 6, 16).reshape(5, 5, 6, 16),
+        "f1": dense_init(k[2], flat, 120), "b1": jnp.zeros((120,)),
+        "f2": dense_init(k[3], 120, 84), "b2": jnp.zeros((84,)),
+        "f3": dense_init(k[4], 84, n_classes), "b3": jnp.zeros((n_classes,)),
+    }
+
+
+def lenet5_apply(params, x, ncfg: NumericsConfig):
+    h = jax.nn.relu(_conv2d(x, params["c1"], ncfg))
+    h = _maxpool(h)
+    h = jax.nn.relu(_conv2d(h, params["c2"], ncfg))
+    h = _maxpool(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(nmatmul(h, params["f1"], ncfg, out_dtype=jnp.float32) + params["b1"])
+    h = jax.nn.relu(nmatmul(h, params["f2"], ncfg, out_dtype=jnp.float32) + params["b2"])
+    return nmatmul(h, params["f3"], ncfg, out_dtype=jnp.float32) + params["b3"]
+
+
+# ---------------------------------------------------------------------------
+# CifarNet (CIFAR-10 row)
+# ---------------------------------------------------------------------------
+
+def cifarnet_init(key, in_ch=3, n_classes=10, hw=32):
+    k = jax.random.split(key, 4)
+    flat = (hw // 4) * (hw // 4) * 64
+    return {
+        "c1": dense_init(k[0], 5 * 5 * in_ch, 32).reshape(5, 5, in_ch, 32),
+        "c2": dense_init(k[1], 5 * 5 * 32, 64).reshape(5, 5, 32, 64),
+        "f1": dense_init(k[2], flat, 384), "b1": jnp.zeros((384,)),
+        "f2": dense_init(k[3], 384, n_classes), "b2": jnp.zeros((n_classes,)),
+    }
+
+
+def cifarnet_apply(params, x, ncfg: NumericsConfig):
+    h = jax.nn.relu(_conv2d(x, params["c1"], ncfg))
+    h = _maxpool(h)
+    h = jax.nn.relu(_conv2d(h, params["c2"], ncfg))
+    h = _maxpool(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(nmatmul(h, params["f1"], ncfg, out_dtype=jnp.float32) + params["b1"])
+    return nmatmul(h, params["f2"], ncfg, out_dtype=jnp.float32) + params["b2"]
+
+
+# ---------------------------------------------------------------------------
+# training / eval harness
+# ---------------------------------------------------------------------------
+
+def xent(logits, y):
+    return jnp.mean(jax.nn.logsumexp(logits, -1) - jnp.take_along_axis(logits, y[:, None], -1)[:, 0])
+
+
+def train_classifier(init_fn, apply_fn, x, y, *, epochs=10, batch=128, lr=1e-3, seed=0,
+                     ncfg=NumericsConfig(mode="f32")):
+    """Adam training in the given numerics mode (paper trains posit16
+    models directly in posit arithmetic)."""
+    params = init_fn(jax.random.PRNGKey(seed))
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step(params, m, v, t, xb, yb):
+        loss, g = jax.value_and_grad(lambda p: xent(apply_fn(p, xb, ncfg), yb))(params)
+        m = jax.tree.map(lambda m_, g_: 0.9 * m_ + 0.1 * g_, m, g)
+        v = jax.tree.map(lambda v_, g_: 0.999 * v_ + 0.001 * g_ * g_, v, g)
+        mb = jax.tree.map(lambda m_: m_ / (1 - 0.9 ** t), m)
+        vb = jax.tree.map(lambda v_: v_ / (1 - 0.999 ** t), v)
+        params = jax.tree.map(lambda p, m_, v_: p - lr * m_ / (jnp.sqrt(v_) + 1e-8), params, mb, vb)
+        return params, m, v, loss
+
+    n = x.shape[0]
+    rng = jax.random.PRNGKey(seed + 1)
+    t = 0
+    for ep in range(epochs):
+        rng, k = jax.random.split(rng)
+        order = jax.random.permutation(k, n)
+        for i in range(0, n - batch + 1, batch):
+            idx = order[i:i + batch]
+            t += 1
+            params, m, v, loss = step(params, m, v, jnp.float32(t), x[idx], y[idx])
+    return params
+
+
+def accuracy(apply_fn, params, x, y, ncfg: NumericsConfig, batch=512, topk=(1,)):
+    correct = {k: 0 for k in topk}
+    n = x.shape[0]
+    fn = jax.jit(lambda xb: apply_fn(params, xb, ncfg))
+    for i in range(0, n, batch):
+        logits = fn(x[i:i + batch])
+        yb = y[i:i + batch]
+        rank = jnp.argsort(-logits, axis=-1)
+        for k in topk:
+            correct[k] += int(jnp.sum(jnp.any(rank[:, :k] == yb[:, None], axis=1)))
+    return {k: c / n for k, c in correct.items()}

@@ -1,0 +1,9 @@
+from .sharding import (  # noqa: F401
+    constrain,
+    current_mesh,
+    expert_parallel_rules,
+    param_shardings,
+    pspec,
+    spec_for_param,
+    use_mesh,
+)

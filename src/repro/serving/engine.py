@@ -1,0 +1,77 @@
+"""Batched serving engine: prefill + greedy/sampled decode over the
+uniform ModelAPI, with posit/PLAM numerics live in every matmul.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import ModelAPI, build
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 16
+    temperature: float = 0.0  # 0 => greedy
+    seed: int = 0
+
+
+class Engine:
+    """Minimal batched inference engine.
+
+    `generate` runs one jitted prefill followed by a jitted
+    lax.while-free python decode loop (each step is one jitted call —
+    the deployment pattern when steps stream back to clients).
+    """
+
+    def __init__(self, cfg: ModelConfig, params=None, key=None):
+        self.cfg = cfg
+        self.api: ModelAPI = build(cfg)
+        self.params = params if params is not None else self.api.init(
+            key if key is not None else jax.random.PRNGKey(0))
+        self._prefill = jax.jit(self.api.prefill)
+        self._decode = jax.jit(self.api.decode_step)
+
+    def generate(self, prompt_batch: dict, scfg: ServeConfig = ServeConfig()):
+        """prompt_batch: family-appropriate prefill inputs (see
+        ModelAPI.prefill_inputs).  Returns [B, max_new_tokens] tokens."""
+        logits, caches = self._prefill(self.params, prompt_batch)
+        b = logits.shape[0]
+        if "tokens" in prompt_batch:
+            pos0 = prompt_batch["tokens"].shape[1]
+        else:
+            pos0 = 0
+        key = jax.random.PRNGKey(scfg.seed)
+        out = []
+        tok = self._pick(logits[:, -1, :], scfg, key)
+        out.append(tok)
+        for i in range(scfg.max_new_tokens - 1):
+            batch = {"token": tok[:, None], "cache_len": jnp.int32(pos0 + i)}
+            batch.update(self._cache_kw(caches, prompt_batch))
+            logits, caches = self._decode(self.params, batch)
+            key = jax.random.fold_in(key, i)
+            tok = self._pick(logits[:, -1, :], scfg, key)
+            out.append(tok)
+        return jnp.stack(out, axis=1)
+
+    def _cache_kw(self, caches, prompt_batch):
+        fam = self.cfg.family
+        if fam in ("dense", "moe", "vlm"):
+            return {"kv_caches": caches}
+        if fam in ("ssm", "hybrid"):
+            return {"caches": caches}
+        if fam == "encdec":
+            # encoder output is fixed for the whole generation
+            if not hasattr(self, "_enc_out"):
+                from repro.models import encdec  # lazy to avoid cycle
+            return {"kv_caches": caches, "enc_out": self._enc_cache}
+        raise ValueError(fam)
+
+    def _pick(self, logits, scfg: ServeConfig, key):
+        if scfg.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / scfg.temperature).astype(jnp.int32)

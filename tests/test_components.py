@@ -1,0 +1,196 @@
+"""Component-level model tests: MoE routing, SSD math, RoPE, chunked CE."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.modes import NumericsConfig
+from repro.models.common import apply_rope, causal_mask
+from repro.models.moe import moe_apply, moe_init
+from repro.models.ssm import _ssd_chunked, mamba2_apply, mamba2_cache_init, mamba2_init
+
+F32 = NumericsConfig(mode="f32")
+
+
+# ---------------------------------------------------------------------------
+# SSD: the chunked algorithm must equal the naive recurrence
+# ---------------------------------------------------------------------------
+
+def _ssd_naive(xh, bs, cs, dt, a_log):
+    b, s, h, hd = xh.shape
+    ds = bs.shape[-1]
+    a = np.exp(-np.exp(np.asarray(a_log))[None, None, :] * np.asarray(dt))  # [B,S,H]
+    state = np.zeros((b, h, ds, hd))
+    ys = []
+    for t in range(s):
+        state = a[:, t][:, :, None, None] * state + np.einsum(
+            "bs,bhd->bhsd", np.asarray(bs)[:, t], np.asarray(xh)[:, t] * np.asarray(dt)[:, t][..., None])
+        ys.append(np.einsum("bs,bhsd->bhd", np.asarray(cs)[:, t], state))
+    return np.stack(ys, axis=1), state
+
+
+@pytest.mark.parametrize("s,chunk", [(16, 4), (16, 16), (12, 5), (32, 8)])
+def test_ssd_chunked_equals_naive(s, chunk):
+    rng = np.random.default_rng(0)
+    b, h, hd, ds = 2, 3, 4, 5
+    xh = jnp.asarray(rng.standard_normal((b, s, h, hd)).astype(np.float32))
+    bs = jnp.asarray(rng.standard_normal((b, s, ds)).astype(np.float32))
+    cs = jnp.asarray(rng.standard_normal((b, s, ds)).astype(np.float32))
+    dt = jnp.asarray(rng.uniform(0.01, 0.5, (b, s, h)).astype(np.float32))
+    a_log = jnp.asarray(rng.uniform(-1, 1, (h,)).astype(np.float32))
+    y, hfin = _ssd_chunked(xh, bs, cs, dt, a_log, chunk)
+    y_ref, h_ref = _ssd_naive(xh, bs, cs, dt, a_log)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(hfin), h_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_mamba_decode_equals_prefill_stepwise():
+    """Running T single-token decode steps == one chunked prefill."""
+    rng = np.random.default_rng(1)
+    d, s = 32, 8
+    kw = dict(expand=2, head_dim=16, d_state=8, chunk=4)
+    p = mamba2_init(jax.random.PRNGKey(0), d, d_conv=4, **{k: v for k, v in kw.items() if k != "chunk"})
+    x = jnp.asarray(rng.standard_normal((2, s, d)).astype(np.float32))
+    y_all, _ = mamba2_apply(p, x, F32, **kw)
+    cache = mamba2_cache_init(2, d, d_conv=4, **{k: v for k, v in kw.items() if k != "chunk"})
+    outs = []
+    for t in range(s):
+        y_t, cache = mamba2_apply(p, x[:, t:t + 1], F32, cache=cache, **kw)
+        outs.append(np.asarray(y_t)[:, 0])
+    np.testing.assert_allclose(np.stack(outs, 1), np.asarray(y_all), rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def _moe(key=0, e=8, k=2, d=16, ff=32, shared=0):
+    p = moe_init(jax.random.PRNGKey(key), d, e, ff, shared, ff, glu=True)
+    return p
+
+
+def test_moe_output_shape_and_finite():
+    p = _moe()
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((2, 12, 16)).astype(np.float32))
+    out = moe_apply(p, x, F32, n_experts=8, top_k=2, capacity_factor=2.0)
+    assert out.shape == x.shape
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_moe_high_capacity_matches_dense_sum():
+    """With capacity >> tokens, output == sum_k gate_k * expert_k(x)."""
+    rng = np.random.default_rng(2)
+    e, k, d, ff = 4, 2, 8, 16
+    p = _moe(3, e, k, d, ff)
+    x = jnp.asarray(rng.standard_normal((1, 6, d)).astype(np.float32))
+    out = np.asarray(moe_apply(p, x, F32, n_experts=e, top_k=k, capacity_factor=100.0))
+
+    xf = np.asarray(x).reshape(6, d)
+    logits = xf @ np.asarray(p["router"])
+    probs = np.exp(logits) / np.exp(logits).sum(-1, keepdims=True)
+    top = np.argsort(-probs, axis=-1)[:, :k]
+    ref = np.zeros_like(xf)
+    for t in range(6):
+        g = probs[t, top[t]]
+        g = g / g.sum()
+        for j, eid in enumerate(top[t]):
+            wg, wu, wd = (np.asarray(p[m][eid]) for m in ("wg", "wu", "wd"))
+            h = (xf[t] @ wu) * (jax.nn.silu(xf[t] @ wg))
+            ref[t] += g[j] * np.asarray(h @ wd)
+    np.testing.assert_allclose(out.reshape(6, d), ref, rtol=2e-3, atol=2e-3)
+
+
+def test_moe_capacity_drops_tokens():
+    """Tiny capacity must drop tokens (outputs partially zeroed), not crash."""
+    p = _moe(4)
+    x = jnp.asarray(np.random.default_rng(3).standard_normal((2, 32, 16)).astype(np.float32))
+    out = moe_apply(p, x, F32, n_experts=8, top_k=2, capacity_factor=0.1)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_moe_shared_experts_add():
+    p = _moe(5, shared=2)
+    x = jnp.asarray(np.random.default_rng(4).standard_normal((1, 8, 16)).astype(np.float32))
+    out = moe_apply(p, x, F32, n_experts=8, top_k=2)
+    p2 = dict(p)
+    del p2["shared"]
+    out2 = moe_apply(p2, x, F32, n_experts=8, top_k=2)
+    assert not np.allclose(np.asarray(out), np.asarray(out2))
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def test_rope_relative_position_property():
+    """<q_i, k_j> depends only on i - j after RoPE."""
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.standard_normal((1, 10, 1, 8)).astype(np.float32))
+    pos = jnp.arange(10)[None, :]
+    qr = np.asarray(apply_rope(q, pos, 10_000.0))
+    k = qr[0, :, 0, :]
+    d03 = float(k[0] @ k[3])
+    d25 = float(k[2] @ k[5])
+    # same underlying vector rotated: <r(x,i), r(x,j)> = f(i-j)
+    assert abs(d03 - d25) < 1e-6 or True  # vectors differ; test with same base below
+    base = jnp.asarray(np.tile(rng.standard_normal((1, 1, 1, 8)).astype(np.float32), (1, 10, 1, 1)))
+    br = np.asarray(apply_rope(base, pos, 10_000.0))[0, :, 0, :]
+    assert abs(br[0] @ br[3] - br[2] @ br[5]) < 1e-4
+
+
+def test_mrope_text_equals_standard_rope():
+    """Equal (t,h,w) position ids == standard RoPE (text-only input)."""
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.standard_normal((2, 6, 2, 16)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(6)[None], (2, 6))
+    pos3 = jnp.broadcast_to(pos[None], (3, 2, 6))
+    std = np.asarray(apply_rope(x, pos, 10_000.0))
+    mro = np.asarray(apply_rope(x, pos3, 10_000.0, sections=(2, 3, 3)))
+    np.testing.assert_allclose(std, mro, rtol=1e-6, atol=1e-6)
+
+
+def test_causal_mask_offset():
+    m = np.asarray(causal_mask(2, 6, q_offset=4))
+    assert m[0, :5].all() and not m[0, 5]
+    assert m[1].all()
+
+
+# ---------------------------------------------------------------------------
+# chunked CE
+# ---------------------------------------------------------------------------
+
+def test_chunked_ce_matches_direct():
+    from repro.configs.base import ModelConfig
+    from repro.models.transformer import lm_loss_chunked
+
+    cfg = ModelConfig(vocab=50, d_model=16, numerics=F32)
+    rng = np.random.default_rng(7)
+    hidden = jnp.asarray(rng.standard_normal((2, 24, 16)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, 50, (2, 24)).astype(np.int32))
+    w = jnp.asarray(rng.standard_normal((16, 50)).astype(np.float32))
+    params = {"unembed": w}
+    import dataclasses
+    cfg = dataclasses.replace(cfg, tie_embeddings=False)
+    l_chunked = float(lm_loss_chunked(cfg, params, hidden, labels, chunk=7))
+    logits = np.asarray(hidden) @ np.asarray(w)
+    lse = jax.nn.logsumexp(jnp.asarray(logits), axis=-1)
+    gold = np.take_along_axis(logits, np.asarray(labels)[..., None], -1)[..., 0]
+    l_direct = float(jnp.mean(lse - gold))
+    assert abs(l_chunked - l_direct) < 1e-4
+
+
+def test_chunked_ce_masks_negative_labels():
+    from repro.configs.base import ModelConfig
+    from repro.models.transformer import lm_loss_chunked
+    import dataclasses
+
+    cfg = dataclasses.replace(ModelConfig(vocab=50, d_model=16, numerics=F32), tie_embeddings=False)
+    rng = np.random.default_rng(8)
+    hidden = jnp.asarray(rng.standard_normal((1, 8, 16)).astype(np.float32))
+    labels = jnp.asarray(np.array([[-1, -1, 3, 4, 5, 6, 7, 8]], dtype=np.int32))
+    params = {"unembed": jnp.asarray(rng.standard_normal((16, 50)).astype(np.float32))}
+    full = float(lm_loss_chunked(cfg, params, hidden, labels, chunk=4))
+    # loss over only the valid suffix must equal the masked full loss
+    suffix = float(lm_loss_chunked(cfg, params, hidden[:, 2:], labels[:, 2:], chunk=4))
+    assert abs(full - suffix) < 1e-5

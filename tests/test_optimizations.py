@@ -1,0 +1,137 @@
+"""Beyond-paper optimization correctness: these change PERFORMANCE,
+never semantics (or change them in documented, tested ways)."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.modes import NumericsConfig, nmatmul, nquant_weight
+from repro.models import build
+from repro.models.attention import attn_core, attn_core_blockwise
+from repro.models.common import causal_mask, rmsnorm
+from repro.models.moe import moe_apply, moe_init
+from repro.numerics import P16, quantize
+
+F32 = NumericsConfig(mode="f32")
+
+
+def test_prequantized_weights_value_identical():
+    """quantize-on-read == prequantize-then-read, bit for bit."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((8, 32)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((32, 16)).astype(np.float32))
+    base = NumericsConfig(mode="posit_quant")
+    pre = dataclasses.replace(base, prequantized_weights=True)
+    wq = nquant_weight(w, base)  # project onto the grid once
+    a = np.asarray(nmatmul(x, w, base))
+    b = np.asarray(nmatmul(x, wq, pre))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_bf16_carrier_close_to_f32_carrier():
+    """Double quantization (posit16 then bf16) stays within bf16 ulp."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((16, 64)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))
+    f = np.asarray(nmatmul(x, w, NumericsConfig(mode="posit_quant")), np.float32)
+    b = np.asarray(nmatmul(x, w, NumericsConfig(mode="posit_quant", carrier="bf16")), np.float32)
+    np.testing.assert_allclose(b, f, rtol=3e-2, atol=3e-2)
+
+
+def test_bf16_carrier_gradients_are_bf16_and_finite():
+    cfg = NumericsConfig(mode="posit_quant", carrier="bf16", prequantized_weights=True)
+    x = jnp.ones((4, 8), jnp.bfloat16)
+    w = jnp.ones((8, 4), jnp.bfloat16)
+    g = jax.grad(lambda x_: jnp.sum(nmatmul(x_, w, cfg).astype(jnp.float32)))(x)
+    assert g.dtype == jnp.bfloat16
+    assert np.all(np.isfinite(np.asarray(g, np.float32)))
+
+
+def test_rmsnorm_custom_vjp_matches_autodiff():
+    def ref(scale, x, eps=1e-6):
+        xf = x.astype(jnp.float32)
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((3, 5, 16)).astype(np.float32))
+    p = {"scale": jnp.asarray(rng.standard_normal(16).astype(np.float32))}
+    g1 = jax.grad(lambda p_, x_: jnp.sum(jnp.sin(rmsnorm(p_, x_))), argnums=(0, 1))(p, x)
+    g2 = jax.grad(lambda p_, x_: jnp.sum(jnp.sin(ref(p_["scale"], x_))), argnums=(0, 1))(p, x)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("block", [8, 16, 64])
+@pytest.mark.parametrize("causal", [True, False])
+def test_blockwise_attention_matches_reference(block, causal):
+    rng = np.random.default_rng(3)
+    b, s, h, kvh, hd = 2, 64, 8, 4, 16
+    q = jnp.asarray(rng.standard_normal((b, s, h, hd)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((b, s, kvh, hd)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((b, s, kvh, hd)).astype(np.float32))
+    mask = causal_mask(s, s) if causal else jnp.ones((s, s), bool)
+    ref = np.asarray(attn_core(q, k, v, mask))
+    out = np.asarray(attn_core_blockwise(q, k, v, causal=causal, block=block))
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_blockwise_attention_grads():
+    rng = np.random.default_rng(4)
+    b, s, h, kvh, hd = 1, 32, 4, 2, 8
+    q = jnp.asarray(rng.standard_normal((b, s, h, hd)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((b, s, kvh, hd)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((b, s, kvh, hd)).astype(np.float32))
+    g1 = jax.grad(lambda q_: jnp.sum(jnp.sin(attn_core(q_, k, v, causal_mask(s, s)))))(q)
+    g2 = jax.grad(lambda q_: jnp.sum(jnp.sin(
+        attn_core_blockwise(q_, k, v, causal=True, block=8))))(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=2e-5, atol=2e-5)
+
+
+def test_grouped_moe_dispatch_matches_ungrouped_high_capacity():
+    """With capacity >> need, grouped and global dispatch agree exactly
+    (no drops on either path)."""
+    rng = np.random.default_rng(5)
+    e, k, d, ff = 8, 2, 16, 32
+    p = moe_init(jax.random.PRNGKey(0), d, e, ff, 0, ff, glu=True)
+    x = jnp.asarray(rng.standard_normal((2, 16, d)).astype(np.float32))
+    a = np.asarray(moe_apply(p, x, F32, n_experts=e, top_k=k, capacity_factor=50.0, groups=1))
+    b = np.asarray(moe_apply(p, x, F32, n_experts=e, top_k=k, capacity_factor=50.0, groups=4))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_grouped_moe_in_model_trains():
+    cfg = ModelConfig(
+        name="moe-g", family="moe", n_layers=2, d_model=64, n_heads=4, n_kv=2,
+        head_dim=16, d_ff=128, vocab=64, n_experts=4, top_k=2, moe_d_ff=32,
+        moe_groups=4, numerics=NumericsConfig(mode="posit_quant"),
+    )
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jnp.asarray(np.random.default_rng(6).integers(0, 64, (2, 32)).astype(np.int32)),
+        "labels": jnp.asarray(np.random.default_rng(7).integers(0, 64, (2, 32)).astype(np.int32)),
+    }
+    loss, grads = jax.jit(jax.value_and_grad(api.train_loss))(params, batch)
+    assert np.isfinite(float(loss))
+    assert all(np.all(np.isfinite(np.asarray(g, np.float32))) for g in jax.tree.leaves(grads))
+
+
+def test_flash_block_in_model_matches_reference_path():
+    base = ModelConfig(
+        name="fb", family="dense", n_layers=2, d_model=64, n_heads=4, n_kv=2,
+        head_dim=16, d_ff=128, vocab=97, numerics=NumericsConfig(mode="f32"),
+    )
+    flash = dataclasses.replace(base, flash_block=16)
+    a_api, f_api = build(base), build(flash)
+    params = a_api.init(jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jnp.asarray(np.random.default_rng(8).integers(0, 97, (2, 32)).astype(np.int32)),
+        "labels": jnp.asarray(np.random.default_rng(9).integers(0, 97, (2, 32)).astype(np.int32)),
+    }
+    la = float(jax.jit(a_api.train_loss)(params, batch))
+    lf = float(jax.jit(f_api.train_loss)(params, batch))
+    assert abs(la - lf) < 1e-4, (la, lf)

@@ -1,0 +1,191 @@
+"""PLAM multiplier tests: paper eqs. (14)-(24), Fig. 4 path, error bound."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.numerics import (
+    P8,
+    P16,
+    PositSpec,
+    decode,
+    exact_mul,
+    encode,
+    mitchell_mul_f32,
+    plam_mul,
+    plam_mul_logfix,
+    plam_product_f32,
+    plam_relative_error,
+)
+from repro.numerics import golden
+
+
+def _all_pairs_n8():
+    pa, pb = np.meshgrid(np.arange(256), np.arange(256))
+    return pa.ravel().astype(np.int32), pb.ravel().astype(np.int32)
+
+
+def test_plam_exhaustive_n8_vs_golden():
+    s = P8
+    pa, pb = _all_pairs_n8()
+    gold = np.array([golden.plam_mul_py(int(a), int(b), 8, 0) for a, b in zip(pa, pb)])
+    mine = np.asarray(plam_mul(jnp.asarray(pa), jnp.asarray(pb), s)) & 0xFF
+    assert np.array_equal(gold, mine)
+
+
+def test_exact_mul_exhaustive_n8_vs_golden():
+    s = P8
+    pa, pb = _all_pairs_n8()
+    gold = np.array([golden.exact_mul_py(int(a), int(b), 8, 0) for a, b in zip(pa, pb)])
+    mine = np.asarray(exact_mul(jnp.asarray(pa), jnp.asarray(pb), s)) & 0xFF
+    assert np.array_equal(gold, mine)
+
+
+def test_fig4_logfix_path_equals_field_equations():
+    """The Fig. 4 hardware datapath (concat + one add) == eqs. (14)-(21)."""
+    for spec in [P8, P16, PositSpec(16, 2), PositSpec(12, 1)]:
+        rng = np.random.default_rng(7)
+        pa = rng.integers(0, 1 << spec.n, 20000).astype(np.int32)
+        pb = rng.integers(0, 1 << spec.n, 20000).astype(np.int32)
+        a = np.asarray(plam_mul(jnp.asarray(pa), jnp.asarray(pb), spec))
+        b = np.asarray(plam_mul_logfix(jnp.asarray(pa), jnp.asarray(pb), spec))
+        assert np.array_equal(a, b)
+
+
+def test_plam_sampled_n16_vs_golden():
+    s = P16
+    rng = np.random.default_rng(8)
+    pa = rng.integers(0, 1 << 16, 10000).astype(np.int32)
+    pb = rng.integers(0, 1 << 16, 10000).astype(np.int32)
+    gold = np.array([golden.plam_mul_py(int(a), int(b), 16, 1) for a, b in zip(pa, pb)])
+    mine = np.asarray(plam_mul(jnp.asarray(pa), jnp.asarray(pb), s)) & 0xFFFF
+    assert np.array_equal(gold, mine)
+
+
+def test_exact_mul_sampled_n16_vs_golden():
+    s = P16
+    rng = np.random.default_rng(9)
+    pa = rng.integers(0, 1 << 16, 10000).astype(np.int32)
+    pb = rng.integers(0, 1 << 16, 10000).astype(np.int32)
+    gold = np.array([golden.exact_mul_py(int(a), int(b), 16, 1) for a, b in zip(pa, pb)])
+    mine = np.asarray(exact_mul(jnp.asarray(pa), jnp.asarray(pb), s)) & 0xFFFF
+    assert np.array_equal(gold, mine)
+
+
+def test_error_bound_11_1_percent():
+    """Paper Sec. III-C: max relative PLAM error is 1/9 ~= 11.1%."""
+    s = P16
+    rng = np.random.default_rng(10)
+    pa = rng.integers(0, 1 << 16, 100000).astype(np.int32)
+    pb = rng.integers(0, 1 << 16, 100000).astype(np.int32)
+    err = np.asarray(plam_relative_error(jnp.asarray(pa), jnp.asarray(pb), s))
+    assert err.max() <= 1.0 / 9.0 + 1e-6
+    assert err.min() >= 0.0  # PLAM always underestimates (C_exact >= C_PLAM)
+    # the bound is achieved when both fractions are 0.5 (paper, Mitchell):
+    half = int(encode(jnp.float32(1.5), s))  # 1.5 = 1 + f with f = 0.5
+    e = float(plam_relative_error(jnp.int32(half), jnp.int32(half), s))
+    assert abs(e - 1.0 / 9.0) < 1e-6
+
+
+def test_empirical_error_matches_eq24():
+    """Measured (exact - plam)/exact equals the analytic formula."""
+    s = P16
+    rng = np.random.default_rng(11)
+    # positive, mid-range posits so decode is exact and no saturation
+    xs = np.float32(np.exp(rng.uniform(-3, 3, 5000)))
+    ys = np.float32(np.exp(rng.uniform(-3, 3, 5000)))
+    pa, pb = encode(jnp.asarray(xs), s), encode(jnp.asarray(ys), s)
+    va = np.asarray(decode(pa, s), dtype=np.float64)
+    vb = np.asarray(decode(pb, s), dtype=np.float64)
+    exact = va * vb
+    plam_lin = np.asarray(plam_product_f32(pa, pb, s), dtype=np.float64)
+    emp = (exact - plam_lin) / exact
+    ana = np.asarray(plam_relative_error(pa, pb, s), dtype=np.float64)
+    assert np.allclose(emp, ana, atol=1e-6)
+
+
+def test_plam_product_f32_matches_reencoded_value():
+    """Linear PLAM product re-encoded == plam_mul pattern (mid-range)."""
+    s = P16
+    rng = np.random.default_rng(12)
+    xs = np.float32(rng.standard_normal(5000))
+    ys = np.float32(rng.standard_normal(5000))
+    pa, pb = encode(jnp.asarray(xs), s), encode(jnp.asarray(ys), s)
+    lin = plam_product_f32(pa, pb, s)
+    re = np.asarray(encode(lin, s)) & 0xFFFF
+    direct = np.asarray(plam_mul(pa, pb, s)) & 0xFFFF
+    assert np.array_equal(re, direct)
+
+
+def test_special_cases():
+    s = P16
+    nar = jnp.int32(0x8000)
+    zero = jnp.int32(0)
+    one = jnp.int32(0x4000)
+    assert int(plam_mul(zero, one, s)) == 0
+    assert int(plam_mul(one, zero, s)) == 0
+    assert int(plam_mul(nar, one, s)) & 0xFFFF == 0x8000
+    assert int(exact_mul(nar, zero, s)) & 0xFFFF == 0x8000
+    # sign handling: (-1) * (-1) = 1, (-1) * 1 = -1
+    neg_one = jnp.int32(0xC000)
+    assert int(plam_mul(neg_one, neg_one, s)) == 0x4000
+    assert int(plam_mul(neg_one, one, s)) & 0xFFFF == 0xC000
+
+
+def test_powers_of_two_are_exact():
+    """fa = fb = 0 -> PLAM error is zero (eq. 24)."""
+    s = P16
+    xs = jnp.asarray(np.float32([0.25, 0.5, 1.0, 2.0, 4.0, 1024.0]))
+    pa = encode(xs, s)
+    for i in range(6):
+        for j in range(6):
+            p = plam_mul(pa[i], pa[j], s)
+            e = exact_mul(pa[i], pa[j], s)
+            assert int(p) == int(e)
+
+
+def test_mitchell_f32_reference():
+    """Float-domain Mitchell: same 11.1% bound, exact on powers of two."""
+    rng = np.random.default_rng(13)
+    a = np.float32(np.exp(rng.uniform(-10, 10, 10000)))
+    b = np.float32(np.exp(rng.uniform(-10, 10, 10000)))
+    m = np.asarray(mitchell_mul_f32(jnp.asarray(a), jnp.asarray(b)), dtype=np.float64)
+    exact = a.astype(np.float64) * b.astype(np.float64)
+    rel = (exact - m) / exact
+    assert rel.max() <= 1.0 / 9.0 + 1e-6
+    assert rel.min() >= -1e-6
+    assert float(mitchell_mul_f32(jnp.float32(4.0), jnp.float32(0.5))) == 2.0
+
+
+@settings(max_examples=300, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=(1 << 16) - 1),
+    st.integers(min_value=0, max_value=(1 << 16) - 1),
+)
+def test_hypothesis_plam_matches_golden(pa, pb):
+    s = P16
+    mine = int(plam_mul(jnp.int32(pa), jnp.int32(pb), s)) & 0xFFFF
+    gold = golden.plam_mul_py(pa, pb, 16, 1)
+    assert mine == gold
+
+
+@settings(max_examples=300, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=(1 << 16) - 1),
+    st.integers(min_value=0, max_value=(1 << 16) - 1),
+)
+def test_hypothesis_plam_commutative(pa, pb):
+    s = P16
+    ab = int(plam_mul(jnp.int32(pa), jnp.int32(pb), s))
+    ba = int(plam_mul(jnp.int32(pb), jnp.int32(pa), s))
+    assert ab == ba
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(min_value=1, max_value=(1 << 15) - 1))
+def test_hypothesis_mul_by_one_identity(pa):
+    """x * 1 == x exactly, for PLAM too (f_one = 0)."""
+    s = P16
+    one = 0x4000
+    assert int(plam_mul(jnp.int32(pa), jnp.int32(one), s)) & 0xFFFF == pa
+    assert int(exact_mul(jnp.int32(pa), jnp.int32(one), s)) & 0xFFFF == pa

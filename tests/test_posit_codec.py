@@ -1,0 +1,138 @@
+"""Codec tests: JAX bit codec vs pure-Python golden vs exhaustive tables."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.numerics import (
+    P8,
+    P16,
+    PositSpec,
+    decode,
+    decode_table,
+    encode,
+    encode_table,
+    pack16,
+    quantize,
+    unpack16,
+)
+from repro.numerics import golden
+
+SPECS = [PositSpec(8, 0), PositSpec(8, 1), PositSpec(16, 1), PositSpec(16, 2), PositSpec(12, 1)]
+
+
+def _match(a, b):
+    return (a == b) | (np.isnan(a) & np.isnan(b))
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=str)
+def test_decode_exhaustive_vs_golden(spec):
+    n = spec.n
+    if n > 12:  # keep runtime bounded; 16-bit covered by sampling below
+        pats = np.random.default_rng(0).integers(0, 1 << n, 4096).astype(np.int32)
+    else:
+        pats = np.arange(1 << n, dtype=np.int32)
+    gold = np.array([golden.decode_py(int(p), n, spec.es) for p in pats])
+    mine = np.asarray(decode(jnp.asarray(pats), spec), dtype=np.float64)
+    assert _match(gold, mine).all()
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=str)
+def test_roundtrip_identity(spec):
+    """encode(decode(p)) == p for every pattern: codec is a bijection."""
+    n = spec.n
+    pats = np.arange(1 << n, dtype=np.int32) if n <= 12 else \
+        np.random.default_rng(1).integers(0, 1 << n, 8192).astype(np.int32)
+    rt = np.asarray(encode(decode(jnp.asarray(pats), spec), spec)) & spec.mask_n
+    assert np.array_equal(rt, pats & spec.mask_n)
+
+
+@pytest.mark.parametrize("spec", [PositSpec(16, 1), PositSpec(8, 0)], ids=str)
+def test_encode_random_floats_vs_golden(spec):
+    rng = np.random.default_rng(2)
+    xs = np.float32(rng.standard_normal(4000) * np.exp(rng.uniform(-30, 30, 4000)))
+    xs = np.concatenate([xs, [0.0, np.inf, -np.inf, np.nan, 1.0, -1.0]]).astype(np.float32)
+    gold = np.array([golden.encode_py(float(v), spec.n, spec.es) for v in xs], dtype=np.int64)
+    mine = np.asarray(encode(jnp.asarray(xs), spec)).astype(np.int64) & spec.mask_n
+    assert np.array_equal(gold, mine)
+
+
+@pytest.mark.parametrize("spec", [PositSpec(16, 1), PositSpec(8, 0)], ids=str)
+def test_rne_tie_to_even_pattern(spec):
+    """Values exactly on the rounding threshold go to the even pattern."""
+    ths = np.array(golden.thresholds(spec.n, spec.es)[:3000], dtype=np.float32)
+    mine = np.asarray(encode(jnp.asarray(ths), spec)).astype(np.int64) & spec.mask_n
+    gold = np.array([golden.encode_py(float(v), spec.n, spec.es) for v in ths], dtype=np.int64)
+    assert np.array_equal(gold, mine)
+    assert (mine % 2 == 0).all()  # even patterns by construction
+
+
+@pytest.mark.parametrize("spec", [PositSpec(16, 1), PositSpec(8, 0), PositSpec(16, 2)], ids=str)
+def test_table_codec_agrees_with_bit_codec(spec):
+    rng = np.random.default_rng(3)
+    xs = np.float32(rng.standard_normal(4000) * np.exp(rng.uniform(-30, 30, 4000)))
+    et = np.asarray(encode_table(jnp.asarray(xs), spec)) & spec.mask_n
+    em = np.asarray(encode(jnp.asarray(xs), spec)) & spec.mask_n
+    assert np.array_equal(et, em)
+    pats = rng.integers(0, 1 << spec.n, 4000).astype(np.int32)
+    dt = np.asarray(decode_table(jnp.asarray(pats), spec))
+    dm = np.asarray(decode(jnp.asarray(pats), spec))
+    assert _match(dt, dm).all()
+
+
+def test_known_posit16_constants():
+    s = P16
+    assert float(decode(jnp.int32(0x4000), s)) == 1.0
+    assert float(decode(jnp.int32(0xC000), s)) == -1.0
+    assert float(decode(jnp.int32(0x7FFF), s)) == 2.0 ** 28  # maxpos
+    assert float(decode(jnp.int32(0x0001), s)) == 2.0 ** -28  # minpos
+    assert float(decode(jnp.int32(0x5000), s)) == 2.0
+    assert float(decode(jnp.int32(0x3000), s)) == 0.5
+    assert np.isnan(float(decode(jnp.int32(0x8000), s)))
+    assert int(encode(jnp.float32(1.0), s)) == 0x4000
+    assert int(encode(jnp.float32(0.0), s)) == 0
+
+
+def test_saturation_no_rounding_to_zero_or_nar():
+    s = P16
+    assert int(encode(jnp.float32(1e30), s)) == 0x7FFF  # maxpos, not NaR
+    assert int(encode(jnp.float32(1e-30), s)) == 0x0001  # minpos, not zero
+    assert int(encode(jnp.float32(-1e30), s)) & 0xFFFF == 0x8001  # -maxpos
+
+
+def test_quantize_idempotent_and_ste():
+    import jax
+
+    s = P16
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(np.float32(rng.standard_normal(1000)))
+    q1 = quantize(x, s)
+    q2 = quantize(q1, s)
+    assert np.array_equal(np.asarray(q1), np.asarray(q2))
+    # straight-through gradient is identity
+    g = jax.grad(lambda v: jnp.sum(quantize(v, s)))(x)
+    assert np.allclose(np.asarray(g), 1.0)
+
+
+def test_pack16_roundtrip():
+    pats = jnp.asarray(np.random.default_rng(5).integers(0, 1 << 16, 1000).astype(np.int32))
+    assert np.array_equal(np.asarray(unpack16(pack16(pats))), np.asarray(pats))
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.floats(min_value=-999999995904.0, max_value=999999995904.0, allow_nan=False, width=32))
+def test_hypothesis_encode_matches_golden(x):
+    s = P16
+    mine = int(encode(jnp.float32(x), s)) & 0xFFFF
+    gold = golden.encode_py(float(np.float32(x)), 16, 1)
+    assert mine == gold
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.floats(min_value=9.999999960041972e-13, max_value=999999995904.0, allow_nan=False, width=32))
+def test_hypothesis_quantize_monotone(x):
+    """Quantization is monotone: q(x) <= q(x * 1.5)."""
+    s = P16
+    a = float(quantize(jnp.float32(x), s))
+    b = float(quantize(jnp.float32(x * 1.5), s))
+    assert a <= b

@@ -1,0 +1,107 @@
+"""Large-scale-runnability substrate: straggler mitigation, elastic
+data-axis resize, decode-attention kernel."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.train.straggler import StepTimer, StragglerPolicy, run_with_straggler_sim
+
+
+def test_straggler_detection_and_escalation():
+    flags, events = run_with_straggler_sim(
+        lambda i: None,
+        60,
+        slow_steps={k: 0.5 for k in range(30, 36)},  # 6 consecutive slow steps
+        timer=StepTimer(min_samples=5),
+        policy=StragglerPolicy(patience=3, action="drop"),
+    )
+    assert all(flags[30:36]), flags[28:38]
+    assert not any(flags[:30])
+    assert events and events[0]["action"] == "drop"
+    assert 32 <= events[0]["step"] <= 35
+
+
+def test_straggler_isolated_blips_do_not_escalate():
+    flags, events = run_with_straggler_sim(
+        lambda i: None,
+        60,
+        slow_steps={20: 0.5, 40: 0.5},  # isolated blips
+        timer=StepTimer(min_samples=5),
+        policy=StragglerPolicy(patience=3),
+    )
+    assert flags[20] and flags[40]
+    assert events == []  # never 3 in a row
+
+
+def test_straggler_window_not_poisoned():
+    """Flagged samples must not widen the baseline distribution."""
+    t = StepTimer(min_samples=5, window=20)
+    for _ in range(10):
+        t.observe(0.010)
+    assert t.observe(0.5)  # straggler
+    assert t.observe(0.5)  # still flagged (median unchanged)
+
+
+def test_elastic_data_axis_resize(tmp_path):
+    """Checkpoint under batch=8 run, resume under batch=4 (half the
+    'hosts'): the stateless pipeline + shape-checked restore make the
+    model state carry over exactly."""
+    from repro.configs.base import ModelConfig
+    from repro.core.modes import NumericsConfig
+    from repro.data.synthetic import DataConfig, lm_batch
+    from repro.models import build
+    from repro.optim.optimizers import OptConfig, init_state
+    from repro.train import checkpoint as ckpt
+    from repro.train.loop import TrainConfig, make_train_step
+
+    cfg = ModelConfig(name="el", family="dense", n_layers=2, d_model=64, n_heads=4,
+                      n_kv=2, head_dim=16, d_ff=128, vocab=64,
+                      numerics=NumericsConfig(mode="f32"))
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    tcfg = TrainConfig(opt=OptConfig(lr=1e-3))
+    step = jax.jit(make_train_step(api.train_loss, tcfg))
+    state = init_state(tcfg.opt, params)
+    d8 = DataConfig(seed=0, vocab=64, seq_len=32, global_batch=8)
+    for i in range(5):
+        params, state, _ = step(params, state, lm_batch(d8, i))
+    ckpt.save(str(tmp_path), 5, (params, state))
+
+    # "cluster shrank": restore and continue with global_batch 4
+    (params2, state2), _ = ckpt.restore(str(tmp_path), (params, state))
+    d4 = DataConfig(seed=0, vocab=64, seq_len=32, global_batch=4)
+    params2, state2, m = step(params2, state2, lm_batch(d4, 5))
+    assert np.isfinite(float(m["loss"]))
+
+
+@pytest.mark.parametrize("shape", [(2, 64, 8, 4, 16, 16), (1, 96, 4, 2, 32, 32)])
+def test_decode_attention_kernel_vs_oracle(shape):
+    from repro.kernels.decode_attention import decode_attention, decode_attention_ref
+
+    b, s, h, kvh, hd, blk = shape
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((b, h, hd)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((b, s, kvh, hd)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((b, s, kvh, hd)).astype(np.float32))
+    lens = jnp.asarray(rng.integers(1, s + 1, b).astype(np.int32))
+    ref = np.asarray(decode_attention_ref(q, k, v, lens))
+    out = np.asarray(decode_attention(q, k, v, lens, blk=blk, interpret=True))
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_kernel_respects_lengths():
+    from repro.kernels.decode_attention import decode_attention, decode_attention_ref
+
+    rng = np.random.default_rng(1)
+    b, s, h, kvh, hd = 2, 64, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((b, h, hd)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((b, s, kvh, hd)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((b, s, kvh, hd)).astype(np.float32))
+    lens = jnp.asarray(np.array([5, 64], np.int32))
+    out = np.asarray(decode_attention(q, k, v, lens, blk=16, interpret=True))
+    # batch 0 must ignore keys >= 5: recompute with truncated cache
+    ref0 = np.asarray(decode_attention_ref(q[:1], k[:1, :5], v[:1, :5], jnp.asarray([5], jnp.int32)))
+    np.testing.assert_allclose(out[0], ref0[0], rtol=2e-5, atol=2e-5)
