@@ -1,4 +1,11 @@
 """Pallas TPU kernels for the PLAM simulator's compute hot-spots."""
+from .decode_attention import (  # noqa: F401
+    decode_attention,
+    decode_attention_ref,
+    gather_pages,
+    paged_decode_attention,
+    paged_decode_attention_ref,
+)
 from .ops import (  # noqa: F401
     plam_dense,
     plam_matmul_bits,

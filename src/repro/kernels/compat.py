@@ -1,0 +1,14 @@
+"""Pallas API compatibility across JAX versions.
+
+jax <= 0.4.x names the TPU compiler-params dataclass
+``pltpu.TPUCompilerParams``; newer releases renamed it to
+``pltpu.CompilerParams``.  Kernels import the alias from here so the
+repo runs against both (CI pins one version, local installs vary).
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None))
+assert CompilerParams is not None, "unsupported Pallas TPU API"

@@ -116,11 +116,17 @@ def parse_computations(hlo: str) -> Dict[str, Computation]:
         args_m = re.search(rf"{opcode}\(([^)]*)\)", rhs)
         operands = []
         if args_m:
-            for tok in args_m.group(1).split(","):
-                tok = tok.strip()
-                nm = re.match(r"%?([\w\.\-]+)$", tok)
-                if nm:
-                    operands.append(nm.group(1))
+            args = args_m.group(1)
+            # operand tokens are either typed ("f32[8,8]{1,0} %foo") or
+            # bare ("foo") depending on the XLA version; typed shapes
+            # embed commas, so prefer the unambiguous %name markers and
+            # only comma-split when the bare format is in use
+            operands = re.findall(r"%([\w\.\-]+)", args)
+            if not operands:
+                for tok in args.split(","):
+                    nm = re.match(r"([\w\.\-]+)$", tok.strip())
+                    if nm:
+                        operands.append(nm.group(1))
         op = OpLine(om.group(2), opcode, _shape_list(type_part), operands, stripped)
         cur.ops.append(op)
         cur.by_name[op.name] = op
@@ -344,7 +350,13 @@ def _multipliers(comps, entries):
                 elif attr == "condition":
                     mc, mb = mult_c[cname], 0.0
                 elif attr in ("calls", "to_apply"):
-                    mc, mb = mult_c[cname], 0.0
+                    # fusion-internal computations run in registers/VMEM
+                    # (traffic counted at the fusion boundary), but a
+                    # plain `call` (XLA:CPU wraps loop bodies in
+                    # parallel_* calls) IS the program — its callee
+                    # keeps the caller's traffic multiplier
+                    mb_in = mult_b[cname] if op.opcode == "call" else 0.0
+                    mc, mb = mult_c[cname], mb_in
                 else:
                     mc, mb = mult_c[cname], mult_b[cname]
                 mult_c[n] += mc

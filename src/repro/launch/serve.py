@@ -2,6 +2,10 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
       --numerics plam_sim --batch 4 --prompt-len 16 --new-tokens 8
+
+``--continuous`` swaps the static batcher for the paged-KV
+continuous-batching engine (dense/moe families), staggering request
+arrivals to exercise per-step admission.
 """
 import argparse
 import dataclasses
@@ -12,7 +16,12 @@ import jax.numpy as jnp
 
 from repro.configs import ARCHS, get_config
 from repro.core.modes import NumericsConfig
-from repro.serving.engine import Engine, ServeConfig
+from repro.serving.engine import (
+    ContinuousBatchingEngine,
+    Engine,
+    PagedServeConfig,
+    ServeConfig,
+)
 
 
 def main():
@@ -26,6 +35,8 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="paged-KV continuous batching (dense/moe)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -36,8 +47,27 @@ def main():
     if cfg.family in ("encdec", "vlm"):
         raise SystemExit("use examples/ for multimodal serving demos")
 
-    eng = Engine(cfg, key=jax.random.PRNGKey(args.seed))
     rng = np.random.default_rng(args.seed)
+    if args.continuous:
+        max_seq = args.prompt_len + args.new_tokens
+        eng = ContinuousBatchingEngine(
+            cfg, key=jax.random.PRNGKey(args.seed),
+            pcfg=PagedServeConfig(
+                block_size=8, num_blocks=4 * args.batch * (max_seq // 8 + 2),
+                max_slots=args.batch, max_seq_len=max_seq + 8,
+                temperature=args.temperature, seed=args.seed))
+        reqs = [eng.submit(
+            rng.integers(0, cfg.vocab, args.prompt_len).tolist(),
+            max_new_tokens=args.new_tokens, arrival_step=i)
+            for i in range(args.batch)]
+        done = eng.run()
+        print(f"arch={cfg.name} numerics={args.numerics} engine=continuous "
+              f"steps={eng.stats.steps} pad_waste={eng.stats.padding_waste():.1%}")
+        for i, r in enumerate(reqs):
+            print(f"req[{i}]: {done[r.rid]}")
+        return
+
+    eng = Engine(cfg, key=jax.random.PRNGKey(args.seed))
     prompts = {"tokens": jnp.asarray(
         rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32))}
     out = eng.generate(prompts, ServeConfig(

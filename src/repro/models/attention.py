@@ -151,6 +151,66 @@ def attn_apply(
     return out, new_kv
 
 
+def attn_apply_paged(
+    p,
+    x,
+    ncfg: NumericsConfig,
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    lengths,
+    k_pages,
+    v_pages,
+    block_tables,
+    rope_theta: float = 10_000.0,
+    mrope_sections=None,
+    softcap=None,
+    use_kernel=None,
+):
+    """Single-token decode attention over a paged KV cache.
+
+    x: [B, 1, d]; k_pages/v_pages: [num_blocks, block_size, kv, hd]
+    pool slices for this layer; block_tables: [B, max_blk] pool indices;
+    lengths: [B] tokens already cached per sequence.  The new token's
+    K/V are scattered into each sequence's current tail block, then
+    attention reads through the block table (`repro.kernels`).  Returns
+    (out [B, 1, d], (k_pages, v_pages)) with the pools updated.
+
+    Numerics: the q/k/v/o projections route through `repro.core.dense`,
+    so posit/PLAM multipliers stay live in serving exactly as in the
+    monolithic path; the attention core is f32 on gathered pages.
+    """
+    from repro.kernels.decode_attention import paged_decode_attention
+
+    from .common import decode_positions
+
+    b, s, _ = x.shape
+    assert s == 1, "paged attention is a single-token decode path"
+    if softcap is not None:  # softcap models use the monolithic path
+        raise NotImplementedError("paged decode does not support logit softcap")
+    block_size = k_pages.shape[1]
+    q = _split_heads(dense(x, p["wq"], ncfg), n_heads, head_dim)
+    k = _split_heads(dense(x, p["wk"], ncfg), n_kv, head_dim)
+    v = _split_heads(dense(x, p["wv"], ncfg), n_kv, head_dim)
+    positions = decode_positions(lengths, mrope=mrope_sections is not None)
+    q = apply_rope(q, positions, rope_theta, mrope_sections)
+    k = apply_rope(k, positions, rope_theta, mrope_sections)
+
+    # scatter the new token into each sequence's tail block
+    bidx = jnp.arange(b)
+    blk = block_tables[bidx, lengths // block_size]  # [B]
+    slot = lengths % block_size
+    k_pages = k_pages.at[blk, slot].set(k[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[blk, slot].set(v[:, 0].astype(v_pages.dtype))
+
+    out = paged_decode_attention(
+        q[:, 0], k_pages, v_pages, block_tables, lengths + 1,
+        use_kernel=use_kernel)
+    out = dense(out.reshape(b, 1, n_heads * head_dim), p["wo"], ncfg)
+    return out, (k_pages, v_pages)
+
+
 def cross_attn_init(key, d: int, n_heads: int, n_kv: int, head_dim: int, dtype=jnp.float32):
     return attn_init(key, d, n_heads, n_kv, head_dim, dtype)
 

@@ -84,6 +84,22 @@ def apply_rope(x, positions, theta: float, sections=None):
     return out.astype(x.dtype)
 
 
+def decode_positions(lengths, mrope: bool = False):
+    """Per-sequence single-token decode positions from cache lengths.
+
+    lengths: [B] int32 — tokens already in each sequence's cache; the
+    incoming token sits at exactly that position.  Returns [B, 1] (or
+    [3, B, 1] broadcast for text-only M-RoPE).  This is the batched
+    generalization of `default_positions(..., offset=cache_len)`, which
+    assumes one shared scalar offset — continuous batching retires and
+    admits sequences mid-flight, so every slot has its own offset.
+    """
+    pos = lengths.astype(jnp.int32)[:, None]
+    if mrope:
+        pos = jnp.broadcast_to(pos[None], (3,) + pos.shape)
+    return pos
+
+
 def causal_mask(s_q: int, s_k: int, q_offset=0):
     """[s_q, s_k] bool mask; True = attend."""
     qi = jnp.arange(s_q)[:, None] + q_offset

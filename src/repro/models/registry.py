@@ -31,6 +31,11 @@ class ModelAPI:
     train_inputs: Callable  # (ShapeSpec) -> batch of ShapeDtypeStruct
     prefill_inputs: Callable
     decode_inputs: Callable
+    # paged KV-cache serving path (continuous batching); None for
+    # families without a paged layout (ssm/hybrid state caches, encdec)
+    paged_pool_init: Optional[Callable] = None  # (num_blocks, block_size) -> pools
+    paged_prefill: Optional[Callable] = None  # (params, tokens, kp, vp, block_ids, true_len)
+    paged_decode_step: Optional[Callable] = None  # (params, token, kp, vp, tables, lengths)
 
 
 def _patches(cfg: ModelConfig) -> int:
@@ -207,8 +212,30 @@ def build(cfg: ModelConfig) -> ModelAPI:
     else:  # pragma: no cover
         raise ValueError(fam)
 
+    paged = {}
+    if fam in ("dense", "moe"):
+        def paged_pool_init(num_blocks, block_size, dtype=cache_dt):
+            return _tf.paged_kv_pool_init(cfg, num_blocks, block_size, dtype)
+
+        def paged_prefill(params, tokens, k_pool, v_pool, block_ids, true_len):
+            return _tf.paged_prefill(
+                cfg, params, tokens, k_pool, v_pool, block_ids, true_len)
+
+        def paged_decode_step(params, token, k_pool, v_pool, block_tables,
+                              lengths, use_kernel=None):
+            return _tf.paged_decode_step(
+                cfg, params, token, k_pool, v_pool, block_tables, lengths,
+                use_kernel=use_kernel)
+
+        paged = dict(
+            paged_pool_init=paged_pool_init,
+            paged_prefill=paged_prefill,
+            paged_decode_step=paged_decode_step,
+        )
+
     return ModelAPI(
         cfg=cfg, init=init, train_loss=train_loss, prefill=prefill,
         decode_step=decode_step, train_inputs=train_inputs,
         prefill_inputs=prefill_inputs, decode_inputs=decode_inputs,
+        **paged,
     )

@@ -20,7 +20,7 @@ from repro.configs.base import ModelConfig
 from repro.core.dense import dense, dense_init
 from repro.parallel.sharding import constrain
 
-from .attention import attn_apply, attn_init
+from .attention import attn_apply, attn_apply_paged, attn_init
 from .common import embed_init, rmsnorm, rmsnorm_init, stack_layer_params
 from .mlp import mlp_apply, mlp_init
 from .moe import moe_apply, moe_init
@@ -56,6 +56,18 @@ def lm_init(cfg: ModelConfig, key):
     return params
 
 
+def _ffn_fwd(cfg: ModelConfig, p, hn):
+    """The post-attention half of a block (MoE or dense MLP)."""
+    if cfg.n_experts:
+        return moe_apply(
+            p["moe"], hn, cfg.numerics,
+            n_experts=cfg.n_experts, top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor, act=cfg.act,
+            groups=cfg.moe_groups,
+        )
+    return mlp_apply(p["mlp"], hn, cfg.numerics, cfg.act)
+
+
 def _layer_fwd(cfg: ModelConfig, p, x, positions, kv_slice, cache_len):
     """One transformer block.  kv_slice None for training (full-seq)."""
     h, new_kv = attn_apply(
@@ -74,16 +86,7 @@ def _layer_fwd(cfg: ModelConfig, p, x, positions, kv_slice, cache_len):
         flash_block=cfg.flash_block,
     )
     x = x + h
-    hn = rmsnorm(p["ln2"], x)
-    if cfg.n_experts:
-        h2 = moe_apply(
-            p["moe"], hn, cfg.numerics,
-            n_experts=cfg.n_experts, top_k=cfg.top_k,
-            capacity_factor=cfg.capacity_factor, act=cfg.act,
-            groups=cfg.moe_groups,
-        )
-    else:
-        h2 = mlp_apply(p["mlp"], hn, cfg.numerics, cfg.act)
+    h2 = _ffn_fwd(cfg, p, rmsnorm(p["ln2"], x))
     x = x + h2
     x = constrain(x, "batch", None, None)
     return x, new_kv
@@ -225,3 +228,90 @@ def decode_step(cfg: ModelConfig, params, token, kv_caches, cache_len):
     )
     logits = lm_logits(cfg, params, hidden)
     return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache path (continuous-batching serving)
+# ---------------------------------------------------------------------------
+
+def paged_kv_pool_init(cfg: ModelConfig, num_blocks: int, block_size: int,
+                       dtype=jnp.bfloat16):
+    """Block-pool KV storage shared by ALL sequences: two arrays of
+    shape [L, num_blocks, block_size, kv, hd].  Sequences own disjoint
+    sets of blocks, named by their block tables (`repro.serving`)."""
+    shape = (cfg.n_layers, num_blocks, block_size, cfg.n_kv, cfg.hd)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+def paged_prefill(cfg: ModelConfig, params, tokens, k_pool, v_pool,
+                  block_ids, true_len):
+    """Prefill ONE request into pool blocks.
+
+    tokens: [1, S_pad] right-padded to a block-size multiple;
+    block_ids: [S_pad / block_size] pool blocks owned by this request;
+    true_len: traced int32 — real prompt length (padding past it is
+    causal-masked out of the returned logits and overwritten by decode
+    before it is ever attendable).  Returns (logits [1, 1, V] at the
+    last real token, updated (k_pool, v_pool)).
+    """
+    b, s = tokens.shape
+    assert b == 1, "paged prefill admits one request at a time"
+    block_size = k_pool.shape[2]
+    nb = block_ids.shape[0]
+    assert s == nb * block_size, (s, nb, block_size)
+    caches = kv_cache_init(cfg, b, s, k_pool.dtype)
+    x = embed_tokens(cfg, params, tokens)
+    positions = default_positions(cfg, b, s)
+    hidden, (ck, cv) = lm_backbone(
+        cfg, params, x, positions, kv_caches=caches, cache_len=jnp.int32(0))
+    kv_shape = (cfg.n_layers, nb, block_size, cfg.n_kv, cfg.hd)
+    k_pool = k_pool.at[:, block_ids].set(ck[:, 0].reshape(kv_shape))
+    v_pool = v_pool.at[:, block_ids].set(cv[:, 0].reshape(kv_shape))
+    last = jax.lax.dynamic_slice_in_dim(hidden, true_len - 1, 1, axis=1)
+    logits = lm_logits(cfg, params, last)
+    return logits, (k_pool, v_pool)
+
+
+def paged_decode_step(cfg: ModelConfig, params, token, k_pool, v_pool,
+                      block_tables, lengths, use_kernel=None):
+    """One decode step for a heterogeneous batch over the paged cache.
+
+    token: [B, 1] last token per slot; block_tables: [B, max_blk] pool
+    indices (inactive slots point at the reserved scratch block 0);
+    lengths: [B] per-sequence cached-token counts — each slot advances
+    independently, which is what lets the engine admit and retire
+    sequences every step.  Returns (logits [B, 1, V], new pools).
+    """
+    x = embed_tokens(cfg, params, token)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    x = constrain(x, "batch", None, None)
+
+    def body(x, scanned):
+        lp, ck, cv = scanned
+        h, (nk, nv) = attn_apply_paged(
+            lp["attn"],
+            rmsnorm(lp["ln1"], x),
+            cfg.numerics,
+            n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv,
+            head_dim=cfg.hd,
+            lengths=lengths,
+            k_pages=ck,
+            v_pages=cv,
+            block_tables=block_tables,
+            rope_theta=cfg.rope_theta,
+            mrope_sections=cfg.mrope_sections,
+            softcap=cfg.attn_logit_softcap,
+            use_kernel=use_kernel,
+        )
+        x = x + h
+        h2 = _ffn_fwd(cfg, lp, rmsnorm(lp["ln2"], x))
+        x = x + h2
+        x = constrain(x, "batch", None, None)
+        return x, (nk, nv)
+
+    x, new_pools = jax.lax.scan(body, x, (params["layers"], k_pool, v_pool))
+    x = rmsnorm(params["ln_f"], x)
+    logits = lm_logits(cfg, params, x)
+    return logits, new_pools

@@ -1,3 +1,4 @@
+"""Mesh construction + named-axis sharding annotations (TP/DP/EP)."""
 from .sharding import (  # noqa: F401
     constrain,
     current_mesh,

@@ -1,0 +1,16 @@
+"""Serving layer: static batcher + continuous-batching paged engine."""
+from .engine import (  # noqa: F401
+    ContinuousBatchingEngine,
+    Engine,
+    PagedServeConfig,
+    ServeConfig,
+    ServeStats,
+)
+from .kv_cache import (  # noqa: F401
+    BlockAllocator,
+    OutOfBlocksError,
+    SCRATCH_BLOCK,
+    SequenceAllocation,
+    padded_prompt_len,
+)
+from .scheduler import Request, RequestState, Scheduler  # noqa: F401

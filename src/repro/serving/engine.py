@@ -1,16 +1,35 @@
-"""Batched serving engine: prefill + greedy/sampled decode over the
-uniform ModelAPI, with posit/PLAM numerics live in every matmul.
+"""Serving engines over the uniform ModelAPI, posit/PLAM numerics live
+in every matmul.
+
+Two engines:
+
+* :class:`Engine` — the original static batcher: one fixed batch in,
+  prefill once, decode in lockstep, everything padded to the longest
+  prompt and running until the last sequence finishes.  Kept as the
+  reference implementation (and for the stateful SSM/hybrid/encdec
+  families, whose caches are not paged).
+* :class:`ContinuousBatchingEngine` — admission-controlled request
+  lifecycle over a paged KV cache: requests are admitted and retired
+  every decode step, each sequence owns exactly the cache blocks it
+  needs, and the jitted decode step gathers per-sequence block tables
+  (`repro.models.transformer.paged_decode_step`).  This is the
+  architectural spine for async / sharded serving PRs.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from functools import partial
+from typing import Dict, List, Optional
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, ShapeSpec
+from repro.configs.base import ModelConfig
 from repro.models import ModelAPI, build
+
+from .kv_cache import BlockAllocator, SCRATCH_BLOCK, padded_prompt_len
+from .scheduler import Request, Scheduler
 
 
 @dataclasses.dataclass
@@ -21,7 +40,7 @@ class ServeConfig:
 
 
 class Engine:
-    """Minimal batched inference engine.
+    """Minimal batched inference engine (static batching).
 
     `generate` runs one jitted prefill followed by a jitted
     lax.while-free python decode loop (each step is one jitted call —
@@ -43,8 +62,13 @@ class Engine:
         b = logits.shape[0]
         if "tokens" in prompt_batch:
             pos0 = prompt_batch["tokens"].shape[1]
+            if "embeds_prefix" in prompt_batch:
+                # vlm: patch embeddings occupy the cache prefix, so the
+                # first decode write/position comes after patches+tokens
+                pos0 += prompt_batch["embeds_prefix"].shape[1]
         else:
             pos0 = 0
+        caches = self._grow_caches(caches, scfg.max_new_tokens)
         key = jax.random.PRNGKey(scfg.seed)
         out = []
         tok = self._pick(logits[:, -1, :], scfg, key)
@@ -57,6 +81,18 @@ class Engine:
             tok = self._pick(logits[:, -1, :], scfg, key)
             out.append(tok)
         return jnp.stack(out, axis=1)
+
+    def _grow_caches(self, caches, max_new_tokens: int):
+        """Prefill allocates caches sized to the prompt; decode then
+        writes at positions prompt_len..prompt_len+max_new-2, which a
+        prompt-sized cache would clamp onto its last slot (silently
+        overwriting the final prompt entry).  Pad the seq axis up front
+        so every decode write lands in a real slot."""
+        if self.cfg.family not in ("dense", "moe", "vlm") or max_new_tokens <= 1:
+            return caches
+        pad = ((0, 0), (0, 0), (0, max_new_tokens - 1), (0, 0), (0, 0))
+        ck, cv = caches
+        return jnp.pad(ck, pad), jnp.pad(cv, pad)
 
     def _cache_kw(self, caches, prompt_batch):
         fam = self.cfg.family
@@ -75,3 +111,217 @@ class Engine:
         if scfg.temperature <= 0:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return jax.random.categorical(key, logits / scfg.temperature).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PagedServeConfig:
+    """Static capacity of a continuous-batching engine instance.
+
+    block_size: cache positions per KV block.
+    num_blocks: pool size (block 0 is reserved scratch, so
+        num_blocks - 1 are allocatable).
+    max_slots: max sequences decoded per step (the jitted batch width).
+    max_seq_len: per-sequence prompt + generated cap; fixes the block
+        table width to ceil(max_seq_len / block_size).
+    """
+
+    block_size: int = 16
+    num_blocks: int = 128
+    max_slots: int = 4
+    max_seq_len: int = 256
+    temperature: float = 0.0
+    seed: int = 0
+    cache_dtype: str = "bfloat16"
+    use_kernel: Optional[bool] = None  # None = auto (Pallas on TPU)
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Padding/utilization accounting, the numbers serve_bench reports."""
+
+    steps: int = 0
+    prefills: int = 0
+    prefill_tokens: int = 0  # real prompt tokens
+    prefill_padding: int = 0  # bucket padding on top of them
+    decode_steps: int = 0
+    active_slot_steps: int = 0  # slot-steps doing useful decode work
+    idle_slot_steps: int = 0  # slot-steps wasted (empty slot, step ran)
+    generated_tokens: int = 0
+
+    def padding_waste(self) -> float:
+        """Fraction of engine capacity spent on padding/idle slots."""
+        spent = (self.prefill_tokens + self.prefill_padding
+                 + self.active_slot_steps + self.idle_slot_steps)
+        wasted = self.prefill_padding + self.idle_slot_steps
+        return wasted / spent if spent else 0.0
+
+
+class ContinuousBatchingEngine:
+    """Admission-controlled serving over a paged KV cache.
+
+    Each `step()`:
+      1. admits waiting requests FCFS while a slot + blocks are free,
+         prefilling each into its own pool blocks;
+      2. runs ONE jitted batched decode step over all running slots,
+         gathering per-sequence block tables and lengths;
+      3. retires finished sequences, returning blocks to the free list.
+
+    Supported families: dense / moe (attention KV caches).  SSM, hybrid
+    and enc-dec keep the static :class:`Engine` — their caches are
+    O(1)-state or encoder-tied, so paging buys nothing.
+    """
+
+    def __init__(self, cfg: ModelConfig, params=None, key=None,
+                 pcfg: PagedServeConfig = PagedServeConfig()):
+        self.cfg = cfg
+        self.pcfg = pcfg
+        self.api: ModelAPI = build(cfg)
+        if self.api.paged_decode_step is None:
+            raise ValueError(
+                f"family {cfg.family!r} has no paged KV layout; use Engine")
+        if cfg.attn_logit_softcap is not None:
+            raise ValueError("paged decode does not support logit softcap")
+        self.params = params if params is not None else self.api.init(
+            key if key is not None else jax.random.PRNGKey(0))
+
+        bs, nb = pcfg.block_size, pcfg.num_blocks
+        self.max_blocks_per_seq = -(-pcfg.max_seq_len // bs)
+        dtype = jnp.dtype(pcfg.cache_dtype)
+        self._k_pool, self._v_pool = self.api.paged_pool_init(nb, bs, dtype)
+        self.allocator = BlockAllocator(nb, bs)
+        self.scheduler = Scheduler(self.allocator, pcfg.max_slots,
+                                   pcfg.max_seq_len)
+
+        donate = (2, 3) if jax.default_backend() != "cpu" else ()
+        self._prefill = jax.jit(self.api.paged_prefill, donate_argnums=donate)
+        self._decode = jax.jit(
+            partial(self.api.paged_decode_step, use_kernel=pcfg.use_kernel),
+            donate_argnums=donate)
+
+        m = pcfg.max_slots
+        self._tables = np.full((m, self.max_blocks_per_seq), SCRATCH_BLOCK,
+                               np.int32)
+        self._lengths = np.zeros((m,), np.int32)
+        self._last_tok = np.zeros((m,), np.int32)
+        self._step_no = 0
+        self._next_rid = 0
+        self.stats = ServeStats()
+
+    @property
+    def current_step(self) -> int:
+        """Engine step counter (arrival_step values are absolute)."""
+        return self._step_no
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int = 16, arrival_step: int = 0,
+               stop_token: Optional[int] = None) -> Request:
+        """Queue a request; returns the Request handle.  Requests must
+        be submitted in non-decreasing arrival_step order (FCFS)."""
+        req = Request(
+            rid=self._next_rid, prompt=[int(t) for t in prompt],
+            max_new_tokens=max_new_tokens, arrival_step=arrival_step,
+            stop_token=stop_token)
+        self._next_rid += 1
+        self.scheduler.submit(req)
+        return req
+
+    # -- engine loop -------------------------------------------------------
+
+    def step(self) -> List[Request]:
+        """One engine iteration; returns requests finished this step."""
+        step = self._step_no
+        finished: List[Request] = []
+
+        for req in self.scheduler.admit(step):
+            self._do_prefill(req)
+            if req.is_done():  # max_new_tokens == 1: done at prefill
+                self._release(req, step)
+                finished.append(req)
+
+        if self.scheduler.running:
+            finished.extend(self._do_decode(step))
+
+        self.stats.steps += 1
+        self._step_no += 1
+        return finished
+
+    def run(self) -> Dict[int, List[int]]:
+        """Drive step() until every submitted request has finished.
+        Returns {rid: generated tokens}."""
+        done: Dict[int, List[int]] = {}
+        while self.scheduler.has_work():
+            for req in self.step():
+                done[req.rid] = req.output
+        return done
+
+    # -- internals ---------------------------------------------------------
+
+    def _do_prefill(self, req: Request) -> None:
+        bs = self.pcfg.block_size
+        plen = req.prompt_len
+        s_pad = padded_prompt_len(plen, bs)
+        toks = np.zeros((1, s_pad), np.int32)
+        toks[0, :plen] = req.prompt
+        block_ids = jnp.asarray(req.alloc.blocks[:s_pad // bs], jnp.int32)
+        logits, (self._k_pool, self._v_pool) = self._prefill(
+            self.params, jnp.asarray(toks), self._k_pool, self._v_pool,
+            block_ids, jnp.int32(plen))
+        tok = int(self._pick_one(logits[0, -1], req, len(req.output)))
+        req.output.append(tok)
+
+        slot = req.slot
+        self._tables[slot] = req.alloc.table_row(self.max_blocks_per_seq)
+        self._lengths[slot] = plen
+        self._last_tok[slot] = tok
+        self.stats.prefills += 1
+        self.stats.prefill_tokens += plen
+        self.stats.prefill_padding += s_pad - plen
+        self.stats.generated_tokens += 1
+
+    def _do_decode(self, step: int) -> List[Request]:
+        token = jnp.asarray(self._last_tok[:, None])
+        logits, (self._k_pool, self._v_pool) = self._decode(
+            self.params, token, self._k_pool, self._v_pool,
+            jnp.asarray(self._tables), jnp.asarray(self._lengths))
+        logits = np.asarray(logits[:, 0], np.float32)
+
+        finished = []
+        running = list(self.scheduler.running.items())
+        self.stats.decode_steps += 1
+        self.stats.active_slot_steps += len(running)
+        self.stats.idle_slot_steps += self.pcfg.max_slots - len(running)
+        for slot, req in running:
+            tok = int(self._pick_one(logits[slot], req, len(req.output)))
+            req.output.append(tok)
+            self._lengths[slot] += 1
+            self._last_tok[slot] = tok
+            self.stats.generated_tokens += 1
+            if req.is_done():
+                self._release(req, step)
+                finished.append(req)
+        return finished
+
+    def _release(self, req: Request, step: int) -> None:
+        slot = req.slot
+        self.scheduler.retire(req, step)
+        self._tables[slot] = SCRATCH_BLOCK
+        self._lengths[slot] = 0
+        self._last_tok[slot] = 0
+
+    def _pick_one(self, logits_row, req: Request, token_idx: int):
+        if self.pcfg.temperature <= 0:
+            # host-side argmax: logits are already materialized as numpy
+            # in the decode loop; a jnp.argmax here would re-upload every
+            # row and add a device round-trip per slot per step
+            return int(np.argmax(np.asarray(logits_row)))
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(self.pcfg.seed), req.rid),
+            token_idx)
+        return int(jax.random.categorical(
+            key, jnp.asarray(logits_row) / self.pcfg.temperature))

@@ -1,0 +1,94 @@
+"""Paged KV cache: fixed-size blocks + a free-list allocator.
+
+Replaces the monolithic per-prompt [L, B, S_max, kv, hd] caches with a
+single shared pool of [L, num_blocks, block_size, kv, hd] and a block
+table per sequence, vLLM-style:
+
+* no per-request padding to a global max length — a sequence holds
+  exactly ceil(len / block_size) blocks;
+* admission control becomes arithmetic on the free list, so the
+  scheduler can decide "does this request fit?" without touching
+  device memory;
+* retiring a sequence is O(1): return its blocks to the free list.
+
+Block 0 is reserved as a scratch block: inactive batch slots in the
+jitted decode step point their block tables at it, so their (masked,
+ignored) writes never corrupt a live sequence.
+
+Device storage lives in the engine as a pair of jnp arrays returned by
+`ModelAPI.paged_pool_init`; this module is the host-side bookkeeping.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import List
+
+
+SCRATCH_BLOCK = 0  # pool index never handed out by the allocator
+
+
+class OutOfBlocksError(RuntimeError):
+    """Raised on allocation from an exhausted pool (callers that want
+    to wait instead should check `can_allocate` first)."""
+
+
+class BlockAllocator:
+    """Free-list allocator over pool indices [1, num_blocks).
+
+    Index 0 is the reserved scratch block (see module docstring).
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        assert num_blocks >= 2, "need at least one allocatable block"
+        assert block_size >= 1
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: deque[int] = deque(range(1, num_blocks))
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Blocks needed to hold n_tokens cache entries."""
+        return max(1, -(-n_tokens // self.block_size))
+
+    def can_allocate(self, n_blocks: int) -> bool:
+        return n_blocks <= self.num_free
+
+    def allocate(self, n_blocks: int) -> List[int]:
+        if not self.can_allocate(n_blocks):
+            raise OutOfBlocksError(
+                f"requested {n_blocks} blocks, {self.num_free} free")
+        return [self._free.popleft() for _ in range(n_blocks)]
+
+    def free(self, blocks: List[int]) -> None:
+        for b in blocks:
+            assert b != SCRATCH_BLOCK, "scratch block is never allocated"
+            assert b not in self._free, f"double free of block {b}"
+            self._free.append(b)
+
+
+@dataclasses.dataclass
+class SequenceAllocation:
+    """The blocks one running sequence owns, in logical order: block i
+    holds cache positions [i*block_size, (i+1)*block_size)."""
+
+    blocks: List[int]
+    block_size: int
+
+    def table_row(self, width: int) -> List[int]:
+        """Block table row padded to the engine's static width with the
+        scratch block (those entries are masked by the length)."""
+        assert len(self.blocks) <= width, (len(self.blocks), width)
+        return self.blocks + [SCRATCH_BLOCK] * (width - len(self.blocks))
+
+    def capacity(self) -> int:
+        return len(self.blocks) * self.block_size
+
+
+def padded_prompt_len(prompt_len: int, block_size: int) -> int:
+    """Prompt length right-padded to a whole number of blocks (the
+    prefill bucket — one XLA compile per distinct value)."""
+    return max(1, -(-prompt_len // block_size)) * block_size

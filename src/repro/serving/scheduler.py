@@ -1,0 +1,138 @@
+"""Request lifecycle + admission control for continuous batching.
+
+A `Request` moves WAITING -> RUNNING -> FINISHED.  Every engine step the
+`Scheduler` retires finished sequences (returning their blocks to the
+free list) and admits waiting ones FCFS while both a batch slot and
+enough KV blocks are available.
+
+Admission reserves blocks for the WHOLE lifetime up front
+(prompt + max_new_tokens), so an admitted sequence can never run out of
+cache mid-decode and no preemption machinery is needed — the right
+trade at this scale; swap-out/recompute preemption is a later PR.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from collections import deque
+from typing import Dict, List, Optional
+
+from .kv_cache import BlockAllocator, SequenceAllocation, padded_prompt_len
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"
+    RUNNING = "running"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    arrival_step: engine step at which the request becomes visible to
+    the scheduler (simulates staggered client arrivals; 0 = present
+    from the start).  stop_token: optional early-termination token id.
+    """
+
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    arrival_step: int = 0
+    stop_token: Optional[int] = None
+
+    # lifecycle (managed by the scheduler/engine)
+    state: RequestState = RequestState.WAITING
+    output: List[int] = dataclasses.field(default_factory=list)
+    alloc: Optional[SequenceAllocation] = None
+    slot: int = -1
+    admitted_step: int = -1
+    finished_step: int = -1
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    def is_done(self) -> bool:
+        if len(self.output) >= self.max_new_tokens:
+            return True
+        return (self.stop_token is not None and len(self.output) > 0
+                and self.output[-1] == self.stop_token)
+
+
+class Scheduler:
+    """FCFS admission over a fixed slot count and a shared block pool."""
+
+    def __init__(self, allocator: BlockAllocator, max_slots: int,
+                 max_seq_len: int):
+        self.allocator = allocator
+        self.max_slots = max_slots
+        self.max_seq_len = max_seq_len
+        self.waiting: deque[Request] = deque()
+        self.running: Dict[int, Request] = {}  # slot -> request
+        self._free_slots = list(range(max_slots - 1, -1, -1))
+
+    # -- bookkeeping -------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        total = req.prompt_len + req.max_new_tokens
+        if total > self.max_seq_len:
+            raise ValueError(
+                f"request {req.rid}: prompt+max_new={total} exceeds "
+                f"engine max_seq_len={self.max_seq_len}")
+        need = self.blocks_needed(req)
+        pool = self.allocator.num_blocks - 1  # block 0 is reserved
+        if need > pool:
+            # reject now: admit() could never satisfy it and the engine
+            # loop would spin forever on a permanently-waiting head
+            raise ValueError(
+                f"request {req.rid}: needs {need} KV blocks but the pool "
+                f"only has {pool}; raise num_blocks or shrink the request")
+        self.waiting.append(req)
+
+    def blocks_needed(self, req: Request) -> int:
+        """Whole-lifetime reservation: padded prompt blocks plus room
+        for every decoded token's KV (the last sampled token is never
+        written back, hence the -1)."""
+        bs = self.allocator.block_size
+        prompt_pad = padded_prompt_len(req.prompt_len, bs)
+        total_positions = max(prompt_pad, req.prompt_len + req.max_new_tokens - 1)
+        return self.allocator.blocks_for(total_positions)
+
+    # -- per-step scheduling ----------------------------------------------
+
+    def admit(self, step: int) -> List[Request]:
+        """Admit waiting requests (arrival-ordered) while a slot and
+        blocks are free.  Strict FCFS: stop at the first request that
+        does not fit, so a small late request cannot starve a big
+        earlier one."""
+        admitted = []
+        while self.waiting and self._free_slots:
+            req = self.waiting[0]
+            if req.arrival_step > step:
+                break  # queue is arrival-ordered
+            need = self.blocks_needed(req)
+            if not self.allocator.can_allocate(need):
+                break
+            self.waiting.popleft()
+            blocks = self.allocator.allocate(need)
+            req.alloc = SequenceAllocation(blocks, self.allocator.block_size)
+            req.slot = self._free_slots.pop()
+            req.state = RequestState.RUNNING
+            req.admitted_step = step
+            self.running[req.slot] = req
+            admitted.append(req)
+        return admitted
+
+    def retire(self, req: Request, step: int) -> None:
+        assert req.state is RequestState.RUNNING
+        req.state = RequestState.FINISHED
+        req.finished_step = step
+        self.allocator.free(req.alloc.blocks)
+        req.alloc = None
+        del self.running[req.slot]
+        self._free_slots.append(req.slot)
+        req.slot = -1
+
+    def has_work(self) -> bool:
+        return bool(self.running) or bool(self.waiting)

@@ -89,15 +89,25 @@ def run_with_straggler_sim(
     slow_steps: dict,  # step -> extra seconds
     timer: Optional[StepTimer] = None,
     policy: Optional[StragglerPolicy] = None,
+    base_step_seconds: Optional[float] = None,
 ):
-    """Drive `step_fn`, injecting slowdowns; returns (flags, escalations)."""
+    """Drive `step_fn`, injecting slowdowns; returns (flags, escalations).
+
+    base_step_seconds: when set, use this fixed per-step time instead of
+    wall-clock — hermetic mode for tests/CI, where scheduler jitter on a
+    loaded machine would otherwise inject phantom stragglers.
+    """
     timer = timer or StepTimer()
     policy = policy or StragglerPolicy()
     flags = []
     for i in range(num_steps):
         t0 = time.perf_counter()
         step_fn(i)
-        elapsed = time.perf_counter() - t0 + slow_steps.get(i, 0.0)
+        if base_step_seconds is None:
+            elapsed = time.perf_counter() - t0
+        else:
+            elapsed = base_step_seconds
+        elapsed += slow_steps.get(i, 0.0)
         flagged = timer.observe(elapsed)
         flags.append(flagged)
         policy.step(i, flagged)

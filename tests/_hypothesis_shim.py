@@ -1,0 +1,153 @@
+"""Deterministic stand-in for `hypothesis` when it is not installed.
+
+The container this repo is developed in cannot pip-install, so the
+property tests would otherwise fail at collection.  This shim
+implements the tiny subset the test-suite uses — ``given``,
+``settings`` and the ``integers`` / ``floats`` / ``sampled_from``
+strategies — by drawing a fixed number of seeded pseudo-random
+examples plus the range boundary cases.  It does NOT shrink or keep a
+failure database; with the real ``hypothesis`` installed (see
+requirements.txt, as in CI) it is never imported.
+
+Installed by tests/conftest.py via ``sys.modules["hypothesis"]``.
+"""
+from __future__ import annotations
+
+import math
+import zlib
+from typing import Any, List, Sequence
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 100
+
+
+class _Strategy:
+    """A strategy = boundary examples + a seeded random sampler."""
+
+    def __init__(self, boundary: Sequence[Any], sample):
+        self._boundary = list(boundary)
+        self._sample = sample
+
+    def draws(self, rng: np.random.Generator, n: int) -> List[Any]:
+        out = list(self._boundary[:n])
+        while len(out) < n:
+            out.append(self._sample(rng))
+        return out
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    boundary = [min_value, max_value]
+    if min_value <= 0 <= max_value:
+        boundary.append(0)
+    if min_value <= 1 <= max_value:
+        boundary.append(1)
+
+    def sample(rng):
+        return int(rng.integers(min_value, max_value + 1))
+
+    return _Strategy(boundary, sample)
+
+
+def floats(min_value: float = None, max_value: float = None,
+           allow_nan: bool = True, allow_infinity: bool = None,
+           width: int = 64) -> _Strategy:
+    lo = -1e300 if min_value is None else float(min_value)
+    hi = 1e300 if max_value is None else float(max_value)
+    if width == 32:
+        lo, hi = float(np.float32(lo)), float(np.float32(hi))
+    boundary = [lo, hi]
+    if lo <= 0.0 <= hi:
+        boundary += [0.0]
+    for v in (1.0, -1.0):
+        if lo <= v <= hi:
+            boundary.append(v)
+
+    def sample(rng):
+        # log-uniform magnitude sampling: uniform-linear over ±1e12
+        # would almost never exercise small magnitudes, and the posit
+        # codec's interesting cases live near 1.
+        if rng.random() < 0.3:
+            v = rng.uniform(lo, hi)
+        else:
+            mag_hi = max(abs(lo), abs(hi), 1e-30)
+            mag_lo = max(min(abs(v) for v in (lo, hi) if v != 0.0), 1e-30) \
+                if (lo > 0 or hi < 0) else 1e-30
+            e = rng.uniform(math.log10(mag_lo), math.log10(mag_hi))
+            v = 10.0 ** e
+            if lo < 0 and rng.random() < 0.5:
+                v = -v
+            v = min(max(v, lo), hi)
+        if width == 32:
+            v = float(np.float32(v))
+        return float(min(max(v, lo), hi))
+
+    return _Strategy(boundary, sample)
+
+
+def sampled_from(elements: Sequence[Any]) -> _Strategy:
+    elements = list(elements)
+
+    def sample(rng):
+        return elements[int(rng.integers(0, len(elements)))]
+
+    return _Strategy([elements[0]], sample)
+
+
+class strategies:  # mirror `from hypothesis import strategies as st`
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    sampled_from = staticmethod(sampled_from)
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        # NOTE: no functools.wraps — it would carry fn's signature via
+        # __wrapped__, and pytest would then demand fixtures named
+        # after the strategy parameters.
+        def wrapper(*args, **kwargs):
+            n = getattr(fn, "_shim_max_examples", DEFAULT_MAX_EXAMPLES)
+            # seed from the test name (crc32: stable across processes,
+            # unlike builtin hash) so every test draws a stable,
+            # distinct example stream
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            columns = [s.draws(rng, n) for s in strats]
+            for i, example in enumerate(zip(*columns)):
+                try:
+                    fn(*args, *example, **kwargs)
+                except _Unsatisfied:
+                    continue
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__name__} failed on shim example {i}: "
+                        f"{example!r}") from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.hypothesis_shim = True
+        return wrapper
+
+    return deco
+
+
+class HealthCheck:
+    all = staticmethod(lambda: [])
+
+
+def assume(condition: bool) -> bool:
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class _Unsatisfied(Exception):
+    pass

@@ -17,6 +17,7 @@ def test_straggler_detection_and_escalation():
         slow_steps={k: 0.5 for k in range(30, 36)},  # 6 consecutive slow steps
         timer=StepTimer(min_samples=5),
         policy=StragglerPolicy(patience=3, action="drop"),
+        base_step_seconds=0.01,  # hermetic: no wall-clock jitter
     )
     assert all(flags[30:36]), flags[28:38]
     assert not any(flags[:30])
@@ -31,6 +32,7 @@ def test_straggler_isolated_blips_do_not_escalate():
         slow_steps={20: 0.5, 40: 0.5},  # isolated blips
         timer=StepTimer(min_samples=5),
         policy=StragglerPolicy(patience=3),
+        base_step_seconds=0.01,  # hermetic: no wall-clock jitter
     )
     assert flags[20] and flags[40]
     assert events == []  # never 3 in a row
