@@ -148,7 +148,7 @@ def main():
     print(f"\n# model 32-bit: area -{r32['area_red_%']:.1f}% power -{r32['power_red_%']:.1f}% "
           f"delay -{r32['delay_red_%']:.1f}%  (paper: -72.9%/-81.8%/-17.0%)")
     print(f"# model 16-bit: area -{r16['area_red_%']:.1f}% power -{r16['power_red_%']:.1f}% "
-          f"(paper: -69.1%/-63.6%)")
+          "(paper: -69.1%/-63.6%)")
 
 
 if __name__ == "__main__":

@@ -52,10 +52,16 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke subset: kernels + error sections only")
     args = ap.parse_args()
 
     def want(name):
-        return args.only is None or args.only == name
+        if args.only is not None:
+            return args.only == name
+        if args.quick:
+            return name in ("kernels", "error")
+        return True
 
     if want("error"):
         _section("error: PLAM approximation error (paper Sec. III-C)")

@@ -1,56 +1,51 @@
 """Serving benchmark: continuous batching vs the static batcher.
 
-Drives both engines over the same mixed-length, staggered-arrival
+Drives the engines over the same mixed-length, staggered-arrival
 request stream (the traffic shape the ROADMAP's north star cares
-about) and reports:
+about) and reports, per engine configuration:
 
 * tokens/sec (generated tokens over wall time, post-warmup);
-* padding waste — the fraction of engine capacity spent on padding
-  prompts to a common length plus slots idling while stragglers finish
-  (static batching) vs bucket padding plus empty slots (continuous).
+* p50 / p95 per-step latency — both engines now keep per-step
+  wall-clock in ``ServeStats``, so the comparison needs no guards;
+  chunked prefill exists precisely to pull the p95 down under mixed
+  traffic (a long prompt costs many bounded steps, not one huge one);
+* padding waste — capacity spent padding prompts plus slots idling.
 
-The static baseline pads every prompt to the stream's max length and
-decodes everyone for max_new steps in lockstep; the paged engine
-admits per step and retires early finishers, so mixed lengths stop
-costing quadratic padding.
+The continuous engine runs a small configuration matrix: tp=1 vs
+tp=<--tp> (when enough devices exist) crossed with unchunked vs
+chunked prefill, and asserts every configuration generates EXACTLY the
+same tokens — the greedy token-identity bar that CI's bench-smoke job
+re-checks on every push.  The bench model serves in plam_sim numerics
+(the paper's approximate multiplier), whose per-matmul quantization
+also keeps greedy argmax invariant to TP reduction-order float noise.
 
 Reading the numbers: padding waste is the architectural win and shows
 at any scale.  At toy CPU scale the static batcher can still win raw
 wall-clock (its whole run is a handful of fused XLA calls, while
-continuous batching pays a host round-trip per step); the reclaimed
-capacity converts to throughput once model compute, not dispatch,
-dominates a step — i.e. at real model sizes on real accelerators.
+continuous batching pays a host round-trip per step) and tp=2 on a
+forced CPU "mesh" pays collectives for no real parallel compute; the
+reclaimed capacity converts to throughput once model compute, not
+dispatch, dominates a step — i.e. at real model sizes on real
+accelerators.
 
-Run:  PYTHONPATH=src python benchmarks/serve_bench.py [--requests 12]
+Run:
+  PYTHONPATH=src python benchmarks/serve_bench.py [--requests 12]
+  PYTHONPATH=src python benchmarks/serve_bench.py \
+      --tp 2 --prefill-chunk 16 --force-host-devices 8 \
+      --json BENCH_serving.json
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
-
-import numpy as np
-import jax
-import jax.numpy as jnp
-
-from repro.configs.base import ModelConfig
-from repro.core.modes import NumericsConfig
-from repro.serving import (
-    ContinuousBatchingEngine,
-    Engine,
-    PagedServeConfig,
-    ServeConfig,
-)
-
-BASE = ModelConfig(
-    name="serve-bench", family="dense", n_layers=4, d_model=128, n_heads=4,
-    n_kv=2, head_dim=32, d_ff=256, vocab=256,
-    numerics=NumericsConfig(mode="f32"),
-    act_dtype="float32", param_dtype="float32",
-)
 
 
 def make_stream(n_requests: int, seed: int = 0):
     """Mixed-length prompts with staggered arrivals (bursty Poisson-ish)."""
+    import numpy as np
+
     rng = np.random.default_rng(seed)
     stream = []
     step = 0
@@ -62,17 +57,24 @@ def make_stream(n_requests: int, seed: int = 0):
     return stream
 
 
-def bench_static(params, stream):
+def bench_static(base_cfg, params, stream):
     """Static batcher: one batch, padded to max prompt len, decoding
     max(max_new) steps for everyone; late arrivals wait for the batch."""
-    eng = Engine(BASE, params)
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.serving import Engine, ServeConfig
+
+    eng = Engine(base_cfg, params)
     max_plen = max(len(p) for p, _, _ in stream)
     max_new = max(m for _, m, _ in stream)
     toks = np.zeros((len(stream), max_plen), np.int32)
     for i, (p, _, _) in enumerate(stream):
         toks[i, max_plen - len(p):] = p  # left-pad (right-aligned prompts)
     batch = {"tokens": jnp.asarray(toks)}
-    scfg = ServeConfig(max_new_tokens=max_new)
+    # time_steps: sync per decode step so p50/p95 are real wall latency
+    scfg = ServeConfig(max_new_tokens=max_new, time_steps=True)
     eng.generate(batch, scfg)  # warmup/compile
     t0 = time.perf_counter()
     out = eng.generate(batch, scfg)
@@ -87,27 +89,33 @@ def bench_static(params, stream):
     spent = prompt_real + prompt_pad + total_tok
     return {
         "engine": "static",
+        "tp": 1,
+        "prefill_chunk": 0,
         "wall_s": dt,
         "useful_tokens": useful,
         "tok_per_s": useful / dt,
+        "p50_step_ms": eng.stats.latency_p50() * 1e3,
+        "p95_step_ms": eng.stats.latency_p95() * 1e3,
         "padding_waste": (prompt_pad + decode_waste) / spent,
     }
 
 
-def bench_continuous(params, stream, warmup: bool = True):
-    from repro.serving import ServeStats
+def bench_continuous(base_cfg, params, stream, *, tp=1, prefill_chunk=0,
+                     warmup=True):
+    from repro.serving import ContinuousBatchingEngine, PagedServeConfig, ServeStats
 
     pcfg = PagedServeConfig(block_size=8, num_blocks=256, max_slots=8,
-                            max_seq_len=128)
-    eng = ContinuousBatchingEngine(BASE, params=params, pcfg=pcfg)
-    if warmup:  # compile prefill buckets + the decode step off the clock
+                            max_seq_len=128, tp=tp, prefill_chunk=prefill_chunk)
+    eng = ContinuousBatchingEngine(base_cfg, params=params, pcfg=pcfg)
+    if warmup:  # compile prefill buckets/chunks + the decode step off the clock
         for p, m, _ in stream:
             eng.submit(p, max_new_tokens=m, arrival_step=0)
         eng.run()
         eng.stats = ServeStats()
     base_step = eng.current_step  # arrival steps are absolute
+    reqs = []
     for p, m, s in stream:
-        eng.submit(p, max_new_tokens=m, arrival_step=base_step + s)
+        reqs.append(eng.submit(p, max_new_tokens=m, arrival_step=base_step + s))
     t0 = time.perf_counter()
     done = eng.run()
     dt = time.perf_counter() - t0
@@ -115,11 +123,16 @@ def bench_continuous(params, stream, warmup: bool = True):
     assert useful == sum(m for _, m, _ in stream), "engine dropped tokens"
     return {
         "engine": "continuous",
+        "tp": tp,
+        "prefill_chunk": prefill_chunk,
         "wall_s": dt,
         "useful_tokens": useful,
         "tok_per_s": useful / dt,
+        "p50_step_ms": eng.stats.latency_p50() * 1e3,
+        "p95_step_ms": eng.stats.latency_p95() * 1e3,
         "padding_waste": eng.stats.padding_waste(),
         "steps": eng.stats.steps,
+        "tokens": [done[r.rid] for r in reqs],
     }
 
 
@@ -127,22 +140,95 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tp", type=int, default=2,
+                    help="sharded configuration to benchmark against tp=1 "
+                         "(skipped when fewer devices exist)")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="chunked-prefill width for the chunked rows "
+                         "(a multiple of the bench block size, 8)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write results (tokens/s, p95 step latency, "
+                         "padding-waste %%) as JSON, e.g. BENCH_serving.json")
+    ap.add_argument("--force-host-devices", type=int, default=0,
+                    help="force N CPU devices via XLA_FLAGS (set before jax "
+                         "initializes; how CI gets a tp-capable host)")
     args = ap.parse_args()
+
+    if args.force_host_devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.force_host_devices}"
+        )
+
+    import jax
+
+    from repro.configs.base import ModelConfig
+    from repro.core.modes import NumericsConfig
+    from repro.serving import Engine
+
+    # PLAM-mode numerics, not f32: besides being the paper's serving
+    # story, the per-matmul quantization snaps logits onto a shared
+    # grid, which makes greedy argmax invariant to the reduction-order
+    # float noise TP introduces (f32 near-ties can flip a token between
+    # tp=1 and tp=2 even though both engines are correct to ~1e-3)
+    base_cfg = ModelConfig(
+        name="serve-bench", family="dense", n_layers=4, d_model=128, n_heads=4,
+        n_kv=2, head_dim=32, d_ff=256, vocab=256,
+        numerics=NumericsConfig(mode="plam_sim", n=16, es=1),
+        act_dtype="float32", param_dtype="float32",
+    )
 
     stream = make_stream(args.requests, args.seed)
     print(f"stream: {len(stream)} requests, prompt lens "
           f"{sorted(len(p) for p, _, _ in stream)}")
-    params = Engine(BASE, key=jax.random.PRNGKey(0)).params
+    params = Engine(base_cfg, key=jax.random.PRNGKey(0)).params
 
-    rows = [bench_static(params, stream), bench_continuous(params, stream)]
-    print(f"\n{'engine':<12}{'tok/s':>10}{'wall_s':>10}{'useful':>8}"
-          f"{'pad_waste':>11}")
+    matrix = [(1, 0), (1, args.prefill_chunk)]
+    if args.tp > 1:
+        if len(jax.devices()) >= args.tp:
+            matrix += [(args.tp, 0), (args.tp, args.prefill_chunk)]
+        else:
+            print(f"[skip] tp={args.tp}: only {len(jax.devices())} device(s); "
+                  f"rerun with --force-host-devices {max(8, args.tp)}")
+
+    rows = [bench_static(base_cfg, params, stream)]
+    for tp, chunk in matrix:
+        rows.append(bench_continuous(base_cfg, params, stream,
+                                     tp=tp, prefill_chunk=chunk))
+
+    # greedy decode must be configuration-invariant: every continuous
+    # config generates the same per-request tokens (CI fails here first)
+    token_sets = [r.pop("tokens") for r in rows if r["engine"] == "continuous"]
+    token_identical = all(t == token_sets[0] for t in token_sets[1:])
+    assert token_identical, (
+        "continuous engine configurations diverged under greedy decode "
+        "(tp/chunked must be token-identical to tp=1 unchunked)")
+
+    hdr = (f"{'engine':<12}{'tp':>3}{'chunk':>6}{'tok/s':>10}{'wall_s':>9}"
+           f"{'p50_ms':>8}{'p95_ms':>8}{'pad_waste':>11}")
+    print("\n" + hdr)
     for r in rows:
-        print(f"{r['engine']:<12}{r['tok_per_s']:>10.1f}{r['wall_s']:>10.3f}"
-              f"{r['useful_tokens']:>8}{r['padding_waste']:>11.1%}")
-    s, c = rows
+        print(f"{r['engine']:<12}{r['tp']:>3}{r['prefill_chunk']:>6}"
+              f"{r['tok_per_s']:>10.1f}{r['wall_s']:>9.3f}"
+              f"{r['p50_step_ms']:>8.2f}{r['p95_step_ms']:>8.2f}"
+              f"{r['padding_waste']:>11.1%}")
+    s, c = rows[0], rows[1]
     print(f"\npadding waste: static {s['padding_waste']:.1%} -> "
-          f"continuous {c['padding_waste']:.1%}")
+          f"continuous {c['padding_waste']:.1%}; token_identical across "
+          f"{len(token_sets)} continuous configs: {token_identical}")
+
+    if args.json:
+        payload = {
+            "bench": "serving",
+            "requests": args.requests,
+            "seed": args.seed,
+            "devices": len(jax.devices()),
+            "token_identical": token_identical,
+            "rows": rows,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

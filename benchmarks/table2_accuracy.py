@@ -14,10 +14,7 @@ three numerics modes like the paper's Table II columns.
 """
 from __future__ import annotations
 
-import functools
 
-import numpy as np
-import jax
 
 from repro.core.modes import NumericsConfig
 from repro.data.synthetic import classification_dataset, image_dataset

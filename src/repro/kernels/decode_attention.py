@@ -20,6 +20,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import current_mesh
 
 from .compat import CompilerParams
 
@@ -27,7 +30,6 @@ DEFAULT_BLOCK = 512
 
 
 def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, blk, kv, group, hd):
-    bi = pl.program_id(0)
     si = pl.program_id(1)
 
     @pl.when(si == 0)
@@ -235,6 +237,42 @@ def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lengths):
     return out.reshape(b, h, hd)
 
 
+def paged_decode_attention_tp(q, k_pool, v_pool, block_tables, lengths, mesh,
+                              *, use_kernel: bool | None = None,
+                              interpret: bool = False):
+    """Head-sharded paged decode attention under tensor parallelism.
+
+    shard_map over the mesh ``model`` axis: each device runs the paged
+    kernel (or the gather oracle) on its local kv-head slice of the
+    pool and the matching q-head slice — no collectives, because GQA
+    groups q heads contiguously by kv head, so shard i's q heads attend
+    exactly shard i's kv heads.  Block tables and lengths are
+    replicated scalars/rows, same values on every shard.
+
+    Requires kv % tp == 0 (the caller falls back to the GSPMD gather
+    path, with the pool sharded on positions via ``seq_tp``, otherwise).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+
+    def local(q_l, kp_l, vp_l, bt, lens):
+        if use_kernel:
+            return paged_decode_attention_kernel(
+                q_l, kp_l, vp_l, bt, lens, interpret=interpret)
+        return paged_decode_attention_ref(q_l, kp_l, vp_l, bt, lens)
+
+    pool_spec = P(None, None, "model", None)
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P(None, "model", None), pool_spec, pool_spec,
+                  P(None, None), P(None)),
+        out_specs=P(None, "model", None),
+        check_rep=False,
+    )(q, k_pool, v_pool, block_tables, lengths)
+
+
 def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths,
                            *, use_kernel: bool | None = None,
                            interpret: bool = False):
@@ -242,7 +280,18 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths,
 
     `use_kernel=None` picks the Pallas kernel on TPU and the jnp gather
     path elsewhere (the kernel also runs anywhere under interpret=True).
+    Under an active TP mesh the head-sharded shard_map path is used when
+    the kv heads divide the model axis; otherwise the gather path runs
+    and GSPMD partitions it over whatever axis the pool is sharded on.
     """
+    mesh = current_mesh()
+    if mesh is not None and "model" in mesh.axis_names:
+        tp = mesh.shape["model"]
+        h, kv = q.shape[1], k_pool.shape[2]
+        if tp > 1 and kv % tp == 0 and h % tp == 0:
+            return paged_decode_attention_tp(
+                q, k_pool, v_pool, block_tables, lengths, mesh,
+                use_kernel=use_kernel, interpret=interpret)
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
     if use_kernel:

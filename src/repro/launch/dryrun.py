@@ -23,8 +23,7 @@ import re
 import time
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.configs import ARCHS, applicable_shapes, get_config, shape_by_name
 from repro.configs.base import ModelConfig, ShapeSpec

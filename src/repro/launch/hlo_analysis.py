@@ -21,7 +21,6 @@ tests/test_hlo_analysis.py.
 from __future__ import annotations
 
 import dataclasses
-import json
 import math
 import re
 from collections import defaultdict

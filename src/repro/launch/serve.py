@@ -5,28 +5,23 @@
 
 ``--continuous`` swaps the static batcher for the paged-KV
 continuous-batching engine (dense/moe families), staggering request
-arrivals to exercise per-step admission.
+arrivals to exercise per-step admission.  ``--tp N`` shards the
+continuous engine tensor-parallel over a (data=1, model=N) mesh;
+``--prefill-chunk M`` turns on chunked prefill (M must be a multiple of
+the engine block size).  On CPU, ``--force-host-devices 8`` fakes an
+8-device platform (sets XLA_FLAGS before jax initializes), which is how
+CI exercises the sharded engine:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
+      --continuous --tp 2 --prefill-chunk 16 --force-host-devices 8
 """
 import argparse
-import dataclasses
-
-import numpy as np
-import jax
-import jax.numpy as jnp
-
-from repro.configs import ARCHS, get_config
-from repro.core.modes import NumericsConfig
-from repro.serving.engine import (
-    ContinuousBatchingEngine,
-    Engine,
-    PagedServeConfig,
-    ServeConfig,
-)
+import os
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--numerics", default="plam_sim",
                     choices=["f32", "bf16", "posit_quant", "plam_sim", "mitchell_f32"])
@@ -37,7 +32,41 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--continuous", action="store_true",
                     help="paged-KV continuous batching (dense/moe)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel ways for the continuous engine")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill width (0 = whole-prompt; "
+                         "must be a multiple of the block size, 8)")
+    ap.add_argument("--force-host-devices", type=int, default=0,
+                    help="force N host (CPU) devices via XLA_FLAGS — must be "
+                         "set before jax initializes, so it only works as a "
+                         "flag, never from inside python")
     args = ap.parse_args()
+
+    if args.force_host_devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.force_host_devices}"
+        )
+
+    # deferred until after XLA_FLAGS is settled: importing repro pulls in jax
+    import dataclasses
+
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import ARCHS, get_config
+    from repro.core.modes import NumericsConfig
+    from repro.serving.engine import (
+        ContinuousBatchingEngine,
+        Engine,
+        PagedServeConfig,
+        ServeConfig,
+    )
+
+    if args.arch not in ARCHS:
+        raise SystemExit(f"unknown arch {args.arch!r}; pick from {sorted(ARCHS)}")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -55,24 +84,32 @@ def main():
             pcfg=PagedServeConfig(
                 block_size=8, num_blocks=4 * args.batch * (max_seq // 8 + 2),
                 max_slots=args.batch, max_seq_len=max_seq + 8,
-                temperature=args.temperature, seed=args.seed))
+                temperature=args.temperature, seed=args.seed,
+                tp=args.tp, prefill_chunk=args.prefill_chunk))
         reqs = [eng.submit(
             rng.integers(0, cfg.vocab, args.prompt_len).tolist(),
             max_new_tokens=args.new_tokens, arrival_step=i)
             for i in range(args.batch)]
         done = eng.run()
         print(f"arch={cfg.name} numerics={args.numerics} engine=continuous "
-              f"steps={eng.stats.steps} pad_waste={eng.stats.padding_waste():.1%}")
+              f"tp={args.tp} prefill_chunk={args.prefill_chunk} "
+              f"steps={eng.stats.steps} pad_waste={eng.stats.padding_waste():.1%} "
+              f"step_p50={eng.stats.latency_p50() * 1e3:.1f}ms "
+              f"step_p95={eng.stats.latency_p95() * 1e3:.1f}ms")
         for i, r in enumerate(reqs):
             print(f"req[{i}]: {done[r.rid]}")
         return
 
+    if args.tp > 1 or args.prefill_chunk:
+        raise SystemExit("--tp / --prefill-chunk require --continuous")
     eng = Engine(cfg, key=jax.random.PRNGKey(args.seed))
     prompts = {"tokens": jnp.asarray(
         rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32))}
     out = eng.generate(prompts, ServeConfig(
         max_new_tokens=args.new_tokens, temperature=args.temperature, seed=args.seed))
-    print(f"arch={cfg.name} numerics={args.numerics}")
+    print(f"arch={cfg.name} numerics={args.numerics} "
+          f"step_p50={eng.stats.latency_p50() * 1e3:.1f}ms "
+          f"step_p95={eng.stats.latency_p95() * 1e3:.1f}ms")
     for i, row in enumerate(np.asarray(out)):
         print(f"batch[{i}]: {row.tolist()}")
 

@@ -180,6 +180,12 @@ def attn_apply_paged(
     Numerics: the q/k/v/o projections route through `repro.core.dense`,
     so posit/PLAM multipliers stay live in serving exactly as in the
     monolithic path; the attention core is f32 on gathered pages.
+
+    Sharding: under an active TP mesh the projections follow the
+    Megatron column/row rules (q/k/v sharded by head), the pool scatter
+    stays shard-local when the pool is kv-head sharded, and
+    `paged_decode_attention` dispatches to its head-sharded shard_map
+    path (or lets GSPMD partition the gather path for GQA kv < tp).
     """
     from repro.kernels.decode_attention import paged_decode_attention
 

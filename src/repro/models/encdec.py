@@ -18,7 +18,7 @@ from repro.parallel.sharding import constrain
 from .attention import attn_apply, attn_init, cross_attn_apply, encode_cross_kv
 from .common import embed_init, rmsnorm, rmsnorm_init, stack_layer_params
 from .mlp import mlp_apply, mlp_init
-from .transformer import default_positions, lm_loss_chunked
+from .transformer import lm_loss_chunked
 
 
 def _enc_layer_init(cfg: ModelConfig, key, dtype):

@@ -11,7 +11,6 @@ HLO stays small; each invocation has its own KV cache slot.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +35,7 @@ class ModelAPI:
     # families without a paged layout (ssm/hybrid state caches, encdec)
     paged_pool_init: Optional[Callable] = None  # (num_blocks, block_size) -> pools
     paged_prefill: Optional[Callable] = None  # (params, tokens, kp, vp, block_ids, true_len)
+    paged_prefill_chunk: Optional[Callable] = None  # (params, tokens, kp, vp, block_ids, cache_len, last_idx)
     paged_decode_step: Optional[Callable] = None  # (params, token, kp, vp, tables, lengths)
 
 
@@ -221,6 +222,12 @@ def build(cfg: ModelConfig) -> ModelAPI:
             return _tf.paged_prefill(
                 cfg, params, tokens, k_pool, v_pool, block_ids, true_len)
 
+        def paged_prefill_chunk(params, tokens, k_pool, v_pool, block_ids,
+                                cache_len, last_idx):
+            return _tf.paged_prefill_chunk(
+                cfg, params, tokens, k_pool, v_pool, block_ids, cache_len,
+                last_idx)
+
         def paged_decode_step(params, token, k_pool, v_pool, block_tables,
                               lengths, use_kernel=None):
             return _tf.paged_decode_step(
@@ -230,6 +237,7 @@ def build(cfg: ModelConfig) -> ModelAPI:
         paged = dict(
             paged_pool_init=paged_pool_init,
             paged_prefill=paged_prefill,
+            paged_prefill_chunk=paged_prefill_chunk,
             paged_decode_step=paged_decode_step,
         )
 

@@ -272,6 +272,45 @@ def paged_prefill(cfg: ModelConfig, params, tokens, k_pool, v_pool,
     return logits, (k_pool, v_pool)
 
 
+def paged_prefill_chunk(cfg: ModelConfig, params, tokens, k_pool, v_pool,
+                        block_ids, cache_len, last_idx):
+    """Prefill ONE chunk of one request through the incremental path.
+
+    tokens: [1, C] — C is the engine's fixed chunk width (a block-size
+    multiple; the ragged final chunk is right-padded to a block
+    multiple).  block_ids: [max_blk] the request's full block-table row
+    (scratch-padded, static width so every chunk shares one compile);
+    cache_len: traced int32 prompt tokens already cached; last_idx:
+    traced int32 chunk-local index of the last REAL token (only
+    meaningful on the final chunk, where its logits seed decoding).
+
+    The sequence's blocks are gathered into a contiguous [L,1,S,kv,hd]
+    cache, the chunk runs through the same dynamic-update + causal-mask
+    attention as single-token decode (`attn_apply` kv_cache path), and
+    the updated cache is scattered back to the pool.  Padding past the
+    real tokens lands beyond `cache_len + real` where the causal mask
+    never reads it before decode overwrites it.  Returns
+    (logits [1, 1, V] at last_idx, updated (k_pool, v_pool)).
+    """
+    b, c = tokens.shape
+    assert b == 1, "chunked prefill admits one request at a time"
+    nl, _, block_size, n_kv, hd = k_pool.shape
+    nb = block_ids.shape[0]
+    s = nb * block_size
+    ck = k_pool[:, block_ids].reshape(nl, 1, s, n_kv, hd)
+    cv = v_pool[:, block_ids].reshape(nl, 1, s, n_kv, hd)
+    x = embed_tokens(cfg, params, tokens)
+    positions = default_positions(cfg, 1, c, offset=cache_len)
+    hidden, (ck, cv) = lm_backbone(
+        cfg, params, x, positions, kv_caches=(ck, cv), cache_len=cache_len)
+    kv_shape = (nl, nb, block_size, n_kv, hd)
+    k_pool = k_pool.at[:, block_ids].set(ck.reshape(kv_shape))
+    v_pool = v_pool.at[:, block_ids].set(cv.reshape(kv_shape))
+    last = jax.lax.dynamic_slice_in_dim(hidden, last_idx, 1, axis=1)
+    logits = lm_logits(cfg, params, last)
+    return logits, (k_pool, v_pool)
+
+
 def paged_decode_step(cfg: ModelConfig, params, token, k_pool, v_pool,
                       block_tables, lengths, use_kernel=None):
     """One decode step for a heterogeneous batch over the paged cache.

@@ -11,7 +11,6 @@ FSDP-over-layers layout), so per-device optimizer memory scales with
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

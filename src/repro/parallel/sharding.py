@@ -151,3 +151,21 @@ def expert_parallel_rules():
 
 def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
+
+
+def paged_pool_spec(mesh: Mesh, shape) -> NamedSharding:
+    """Sharding for a paged KV pool [L, num_blocks, block_size, kv, hd].
+
+    Prefer tensor-parallel over the kv-head axis — it matches the
+    column-parallel wk/wv projections, so the per-token pool scatter in
+    paged decode stays local to each shard.  When GQA leaves fewer kv
+    heads than the model axis (kv % tp != 0) fall back to the ``seq_tp``
+    rule: positions-within-block sharded over the model axis (the
+    gather-attend path partitions cleanly under GSPMD).  If neither
+    divides, replicate.  Block tables and the allocator never shard —
+    they are host-side numpy, replicated into every jitted step.
+    """
+    dims = sanitize(mesh, (None, None, None, "model", None), shape)
+    if dims[3] is None:
+        dims = sanitize(mesh, (None, None, "seq_tp", None, None), shape)
+    return NamedSharding(mesh, pspec(mesh, dims))

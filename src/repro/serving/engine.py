@@ -12,14 +12,30 @@ Two engines:
   lifecycle over a paged KV cache: requests are admitted and retired
   every decode step, each sequence owns exactly the cache blocks it
   needs, and the jitted decode step gathers per-sequence block tables
-  (`repro.models.transformer.paged_decode_step`).  This is the
-  architectural spine for async / sharded serving PRs.
+  (`repro.models.transformer.paged_decode_step`).
+
+The continuous engine is mesh-aware: ``PagedServeConfig.tp`` shards
+model weights tensor-parallel (Megatron-style, via
+``repro.parallel.sharding.param_shardings``) and the paged KV pool over
+its kv-head axis (``seq_tp`` positions fallback for GQA), while the
+block table, allocator and scheduler stay replicated host-side — the
+control plane never notices the mesh.  ``prefill_chunk`` turns on
+chunked prefill on top of either: long prompts are written in
+fixed-size chunks, one per engine step, interleaved with decode, so a
+long prompt bounds per-step latency instead of stalling every running
+sequence behind one monolithic prefill.
+
+Both engines keep per-step wall-clock latencies in ``ServeStats`` so
+benchmarks read p50/p95 from either engine through the same interface.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import time
+from collections import deque
 from functools import partial
-from typing import Dict, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import numpy as np
 import jax
@@ -27,6 +43,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import ModelAPI, build
+from repro.parallel.sharding import paged_pool_spec, param_shardings, use_mesh
 
 from .kv_cache import BlockAllocator, SCRATCH_BLOCK, padded_prompt_len
 from .scheduler import Request, Scheduler
@@ -37,6 +54,57 @@ class ServeConfig:
     max_new_tokens: int = 16
     temperature: float = 0.0  # 0 => greedy
     seed: int = 0
+    # sync the device after every decode step so ServeStats records true
+    # per-step wall latency.  Off by default: the sync costs a host
+    # round-trip per token, and generate()'s plain callers should keep
+    # XLA's async dispatch (benchmarks turn it on)
+    time_steps: bool = False
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Padding/utilization/latency accounting: what serve_bench reports.
+
+    Both engines fill the same fields — ``step_latency_s`` holds one
+    wall-clock entry per engine step (the static engine counts its
+    prefill as step 0, then one entry per lockstep decode), so latency
+    percentiles compare across engines without attribute guards.
+    """
+
+    steps: int = 0
+    prefills: int = 0
+    prefill_tokens: int = 0  # real prompt tokens
+    prefill_padding: int = 0  # bucket/chunk padding on top of them
+    decode_steps: int = 0
+    active_slot_steps: int = 0  # slot-steps doing useful decode work
+    idle_slot_steps: int = 0  # slot-steps wasted (empty slot, step ran)
+    generated_tokens: int = 0
+    step_latency_s: List[float] = dataclasses.field(default_factory=list)
+
+    def padding_waste(self) -> float:
+        """Fraction of engine capacity spent on padding/idle slots."""
+        spent = (
+            self.prefill_tokens
+            + self.prefill_padding
+            + self.active_slot_steps
+            + self.idle_slot_steps
+        )
+        wasted = self.prefill_padding + self.idle_slot_steps
+        return wasted / spent if spent else 0.0
+
+    def record_step(self, seconds: float) -> None:
+        self.step_latency_s.append(seconds)
+
+    def latency_quantile(self, q: float) -> float:
+        if not self.step_latency_s:
+            return 0.0
+        return float(np.quantile(np.asarray(self.step_latency_s), q))
+
+    def latency_p50(self) -> float:
+        return self.latency_quantile(0.50)
+
+    def latency_p95(self) -> float:
+        return self.latency_quantile(0.95)
 
 
 class Engine:
@@ -50,14 +118,30 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params=None, key=None):
         self.cfg = cfg
         self.api: ModelAPI = build(cfg)
-        self.params = params if params is not None else self.api.init(
-            key if key is not None else jax.random.PRNGKey(0))
+        self.params = (
+            params
+            if params is not None
+            else self.api.init(key if key is not None else jax.random.PRNGKey(0))
+        )
         self._prefill = jax.jit(self.api.prefill)
         self._decode = jax.jit(self.api.decode_step)
+        self._enc_cache = None  # encdec: encoder output, fixed per generate()
+        self.stats = ServeStats()
 
     def generate(self, prompt_batch: dict, scfg: ServeConfig = ServeConfig()):
         """prompt_batch: family-appropriate prefill inputs (see
-        ModelAPI.prefill_inputs).  Returns [B, max_new_tokens] tokens."""
+        ModelAPI.prefill_inputs).  Returns [B, max_new_tokens] tokens.
+
+        ``self.stats`` is reset per call and filled with the same
+        counters the continuous engine keeps: step 0 is the whole
+        prefill (+ first sampled token), every later step one lockstep
+        decode over the full batch.  Per-step wall latencies are only
+        recorded under ``scfg.time_steps`` (they require a device sync
+        per step, which would break async dispatch for normal callers).
+        """
+        self.stats = ServeStats()
+        self._enc_cache = None  # recomputed per generate (frames differ)
+        t0 = time.perf_counter()
         logits, caches = self._prefill(self.params, prompt_batch)
         b = logits.shape[0]
         if "tokens" in prompt_batch:
@@ -72,14 +156,29 @@ class Engine:
         key = jax.random.PRNGKey(scfg.seed)
         out = []
         tok = self._pick(logits[:, -1, :], scfg, key)
+        if scfg.time_steps:
+            jax.block_until_ready(tok)
+            self.stats.record_step(time.perf_counter() - t0)
         out.append(tok)
+        self.stats.steps += 1
+        self.stats.prefills += 1
+        self.stats.prefill_tokens += b * pos0
+        self.stats.generated_tokens += b
         for i in range(scfg.max_new_tokens - 1):
+            t0 = time.perf_counter()
             batch = {"token": tok[:, None], "cache_len": jnp.int32(pos0 + i)}
             batch.update(self._cache_kw(caches, prompt_batch))
             logits, caches = self._decode(self.params, batch)
             key = jax.random.fold_in(key, i)
             tok = self._pick(logits[:, -1, :], scfg, key)
+            if scfg.time_steps:
+                jax.block_until_ready(tok)
+                self.stats.record_step(time.perf_counter() - t0)
             out.append(tok)
+            self.stats.steps += 1
+            self.stats.decode_steps += 1
+            self.stats.active_slot_steps += b
+            self.stats.generated_tokens += b
         return jnp.stack(out, axis=1)
 
     def _grow_caches(self, caches, max_new_tokens: int):
@@ -88,7 +187,10 @@ class Engine:
         prompt-sized cache would clamp onto its last slot (silently
         overwriting the final prompt entry).  Pad the seq axis up front
         so every decode write lands in a real slot."""
-        if self.cfg.family not in ("dense", "moe", "vlm") or max_new_tokens <= 1:
+        if (
+            self.cfg.family not in ("dense", "moe", "vlm", "encdec")
+            or max_new_tokens <= 1
+        ):
             return caches
         pad = ((0, 0), (0, 0), (0, max_new_tokens - 1), (0, 0), (0, 0))
         ck, cv = caches
@@ -101,9 +203,15 @@ class Engine:
         if fam in ("ssm", "hybrid"):
             return {"caches": caches}
         if fam == "encdec":
-            # encoder output is fixed for the whole generation
-            if not hasattr(self, "_enc_out"):
+            # the encoder output is fixed for the whole generation but
+            # api.prefill does not return it — recompute it once from
+            # the prompt frames and reuse it for every decode step
+            if self._enc_cache is None:
                 from repro.models import encdec  # lazy to avoid cycle
+
+                self._enc_cache = jax.jit(partial(encdec.encode, self.cfg))(
+                    self.params, prompt_batch["frames"]
+                )
             return {"kv_caches": caches, "enc_out": self._enc_cache}
         raise ValueError(fam)
 
@@ -128,6 +236,16 @@ class PagedServeConfig:
     max_slots: max sequences decoded per step (the jitted batch width).
     max_seq_len: per-sequence prompt + generated cap; fixes the block
         table width to ceil(max_seq_len / block_size).
+    tp: tensor-parallel ways.  >1 builds a (data=1, model=tp) mesh over
+        the first tp local devices, shards parameters Megatron-style and
+        the KV pool per ``repro.parallel.sharding.paged_pool_spec``; on
+        CPU force devices first with
+        ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    prefill_chunk: 0 = whole-prompt prefill (one bucket-padded call per
+        request).  >0 = chunked prefill: prompts are written
+        ``prefill_chunk`` tokens per engine step, interleaved with
+        decode.  Must be a multiple of block_size so chunk starts stay
+        block-aligned inside the sequence's allocation.
     """
 
     block_size: int = 16
@@ -138,76 +256,107 @@ class PagedServeConfig:
     seed: int = 0
     cache_dtype: str = "bfloat16"
     use_kernel: Optional[bool] = None  # None = auto (Pallas on TPU)
-
-
-@dataclasses.dataclass
-class ServeStats:
-    """Padding/utilization accounting, the numbers serve_bench reports."""
-
-    steps: int = 0
-    prefills: int = 0
-    prefill_tokens: int = 0  # real prompt tokens
-    prefill_padding: int = 0  # bucket padding on top of them
-    decode_steps: int = 0
-    active_slot_steps: int = 0  # slot-steps doing useful decode work
-    idle_slot_steps: int = 0  # slot-steps wasted (empty slot, step ran)
-    generated_tokens: int = 0
-
-    def padding_waste(self) -> float:
-        """Fraction of engine capacity spent on padding/idle slots."""
-        spent = (self.prefill_tokens + self.prefill_padding
-                 + self.active_slot_steps + self.idle_slot_steps)
-        wasted = self.prefill_padding + self.idle_slot_steps
-        return wasted / spent if spent else 0.0
+    tp: int = 1
+    prefill_chunk: int = 0
 
 
 class ContinuousBatchingEngine:
     """Admission-controlled serving over a paged KV cache.
 
     Each `step()`:
-      1. admits waiting requests FCFS while a slot + blocks are free,
-         prefilling each into its own pool blocks;
-      2. runs ONE jitted batched decode step over all running slots,
-         gathering per-sequence block tables and lengths;
-      3. retires finished sequences, returning blocks to the free list.
+      1. admits waiting requests FCFS while a slot + blocks are free —
+         whole-prompt prefill immediately, or queued for chunked
+         prefill when ``prefill_chunk`` is set;
+      2. feeds at most ONE prompt chunk (head-of-line) when chunking;
+      3. runs ONE jitted batched decode step over all fully-prefilled
+         slots, gathering per-sequence block tables and lengths;
+      4. retires finished sequences, returning blocks to the free list.
 
     Supported families: dense / moe (attention KV caches).  SSM, hybrid
     and enc-dec keep the static :class:`Engine` — their caches are
     O(1)-state or encoder-tied, so paging buys nothing.
+
+    Under ``tp > 1`` every jitted call runs inside the engine's mesh:
+    parameters and KV pool are device_put with their shardings once at
+    construction, activations follow the model's ``constrain`` rules,
+    and decode attention dispatches to the head-sharded shard_map path
+    (`repro.kernels.decode_attention.paged_decode_attention_tp`) when
+    kv heads divide tp.  Host-side state (block tables, lengths, last
+    tokens, the scheduler) is identical to the single-device engine.
     """
 
-    def __init__(self, cfg: ModelConfig, params=None, key=None,
-                 pcfg: PagedServeConfig = PagedServeConfig()):
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params=None,
+        key=None,
+        pcfg: PagedServeConfig = PagedServeConfig(),
+    ):
         self.cfg = cfg
         self.pcfg = pcfg
         self.api: ModelAPI = build(cfg)
         if self.api.paged_decode_step is None:
             raise ValueError(
-                f"family {cfg.family!r} has no paged KV layout; use Engine")
+                f"family {cfg.family!r} has no paged KV layout; use Engine"
+            )
         if cfg.attn_logit_softcap is not None:
             raise ValueError("paged decode does not support logit softcap")
-        self.params = params if params is not None else self.api.init(
-            key if key is not None else jax.random.PRNGKey(0))
+        if pcfg.prefill_chunk and pcfg.prefill_chunk % pcfg.block_size:
+            raise ValueError(
+                f"prefill_chunk={pcfg.prefill_chunk} must be a multiple of "
+                f"block_size={pcfg.block_size}"
+            )
+        if pcfg.prefill_chunk and self.api.paged_prefill_chunk is None:
+            raise ValueError(f"family {cfg.family!r} has no chunked prefill path")
+
+        self._mesh = None
+        if pcfg.tp > 1:
+            ndev = len(jax.devices())
+            if ndev < pcfg.tp:
+                raise ValueError(
+                    f"tp={pcfg.tp} needs at least {pcfg.tp} devices, found {ndev}; "
+                    "on CPU force more with "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=N"
+                )
+            self._mesh = jax.make_mesh((1, pcfg.tp), ("data", "model"))
+
+        self.params = (
+            params
+            if params is not None
+            else self.api.init(key if key is not None else jax.random.PRNGKey(0))
+        )
 
         bs, nb = pcfg.block_size, pcfg.num_blocks
         self.max_blocks_per_seq = -(-pcfg.max_seq_len // bs)
         dtype = jnp.dtype(pcfg.cache_dtype)
         self._k_pool, self._v_pool = self.api.paged_pool_init(nb, bs, dtype)
+        if self._mesh is not None:
+            self.params = jax.device_put(
+                self.params, param_shardings(self._mesh, self.params)
+            )
+            pool_sharding = paged_pool_spec(self._mesh, self._k_pool.shape)
+            self._k_pool = jax.device_put(self._k_pool, pool_sharding)
+            self._v_pool = jax.device_put(self._v_pool, pool_sharding)
         self.allocator = BlockAllocator(nb, bs)
-        self.scheduler = Scheduler(self.allocator, pcfg.max_slots,
-                                   pcfg.max_seq_len)
+        self.scheduler = Scheduler(self.allocator, pcfg.max_slots, pcfg.max_seq_len)
 
         donate = (2, 3) if jax.default_backend() != "cpu" else ()
         self._prefill = jax.jit(self.api.paged_prefill, donate_argnums=donate)
+        self._prefill_chunk = (
+            jax.jit(self.api.paged_prefill_chunk, donate_argnums=donate)
+            if self.api.paged_prefill_chunk is not None
+            else None
+        )
         self._decode = jax.jit(
             partial(self.api.paged_decode_step, use_kernel=pcfg.use_kernel),
-            donate_argnums=donate)
+            donate_argnums=donate,
+        )
 
         m = pcfg.max_slots
-        self._tables = np.full((m, self.max_blocks_per_seq), SCRATCH_BLOCK,
-                               np.int32)
+        self._tables = np.full((m, self.max_blocks_per_seq), SCRATCH_BLOCK, np.int32)
         self._lengths = np.zeros((m,), np.int32)
         self._last_tok = np.zeros((m,), np.int32)
+        self._prefilling: Deque[Request] = deque()
         self._step_no = 0
         self._next_rid = 0
         self.stats = ServeStats()
@@ -217,16 +366,30 @@ class ContinuousBatchingEngine:
         """Engine step counter (arrival_step values are absolute)."""
         return self._step_no
 
+    def _mesh_ctx(self):
+        """Context manager activating the engine's mesh (no-op at tp=1)."""
+        if self._mesh is None:
+            return contextlib.nullcontext()
+        return use_mesh(self._mesh)
+
     # -- request intake ----------------------------------------------------
 
-    def submit(self, prompt, max_new_tokens: int = 16, arrival_step: int = 0,
-               stop_token: Optional[int] = None) -> Request:
+    def submit(
+        self,
+        prompt,
+        max_new_tokens: int = 16,
+        arrival_step: int = 0,
+        stop_token: Optional[int] = None,
+    ) -> Request:
         """Queue a request; returns the Request handle.  Requests must
         be submitted in non-decreasing arrival_step order (FCFS)."""
         req = Request(
-            rid=self._next_rid, prompt=[int(t) for t in prompt],
-            max_new_tokens=max_new_tokens, arrival_step=arrival_step,
-            stop_token=stop_token)
+            rid=self._next_rid,
+            prompt=[int(t) for t in prompt],
+            max_new_tokens=max_new_tokens,
+            arrival_step=arrival_step,
+            stop_token=stop_token,
+        )
         self._next_rid += 1
         self.scheduler.submit(req)
         return req
@@ -234,21 +397,42 @@ class ContinuousBatchingEngine:
     # -- engine loop -------------------------------------------------------
 
     def step(self) -> List[Request]:
-        """One engine iteration; returns requests finished this step."""
+        """One engine iteration; returns requests finished this step.
+
+        With chunked prefill, at most one prompt chunk (head-of-line
+        FCFS) is processed before the decode step for every
+        fully-prefilled sequence — per-step latency stays bounded by
+        one chunk + one decode instead of one whole prompt.
+        """
+        t0 = time.perf_counter()
         step = self._step_no
         finished: List[Request] = []
 
         for req in self.scheduler.admit(step):
-            self._do_prefill(req)
-            if req.is_done():  # max_new_tokens == 1: done at prefill
-                self._release(req, step)
-                finished.append(req)
+            if self.pcfg.prefill_chunk:
+                # blocks + slot reserved; the prompt is fed chunkwise
+                # (the slot stays scratch-masked until prefill is done)
+                self._prefilling.append(req)
+            else:
+                self._do_prefill(req)
+                if req.is_done():  # max_new_tokens == 1: done at prefill
+                    self._release(req, step)
+                    finished.append(req)
 
-        if self.scheduler.running:
+        if self._prefilling:
+            req = self._prefilling[0]
+            if self._do_prefill_chunk(req):
+                self._prefilling.popleft()
+                if req.is_done():  # max_new_tokens == 1 / stop at first token
+                    self._release(req, step)
+                    finished.append(req)
+
+        if any(r.prefill_done for r in self.scheduler.running.values()):
             finished.extend(self._do_decode(step))
 
         self.stats.steps += 1
         self._step_no += 1
+        self.stats.record_step(time.perf_counter() - t0)
         return finished
 
     def run(self) -> Dict[int, List[int]]:
@@ -268,10 +452,17 @@ class ContinuousBatchingEngine:
         s_pad = padded_prompt_len(plen, bs)
         toks = np.zeros((1, s_pad), np.int32)
         toks[0, :plen] = req.prompt
-        block_ids = jnp.asarray(req.alloc.blocks[:s_pad // bs], jnp.int32)
-        logits, (self._k_pool, self._v_pool) = self._prefill(
-            self.params, jnp.asarray(toks), self._k_pool, self._v_pool,
-            block_ids, jnp.int32(plen))
+        block_ids = jnp.asarray(req.alloc.blocks[: s_pad // bs], jnp.int32)
+        with self._mesh_ctx():
+            logits, (self._k_pool, self._v_pool) = self._prefill(
+                self.params,
+                jnp.asarray(toks),
+                self._k_pool,
+                self._v_pool,
+                block_ids,
+                jnp.int32(plen),
+            )
+        req.prefill_pos = plen
         tok = int(self._pick_one(logits[0, -1], req, len(req.output)))
         req.output.append(tok)
 
@@ -284,19 +475,75 @@ class ContinuousBatchingEngine:
         self.stats.prefill_padding += s_pad - plen
         self.stats.generated_tokens += 1
 
+    def _do_prefill_chunk(self, req: Request) -> bool:
+        """Write ONE chunk of `req`'s prompt into its pool blocks.
+
+        Returns True when the prompt is fully cached — the first token
+        is then sampled and the slot activated for decode.  The chunk
+        width is fixed at prefill_chunk (one compile); the ragged final
+        chunk is padded to a block multiple (<= chunk width, one
+        compile per distinct residue bucket — same trade as the
+        whole-prompt buckets).
+        """
+        bs, chunk = self.pcfg.block_size, self.pcfg.prefill_chunk
+        start = req.prefill_pos
+        remaining = req.prompt_len - start
+        width = chunk if remaining > chunk else padded_prompt_len(remaining, bs)
+        real = min(remaining, chunk)
+        toks = np.zeros((1, width), np.int32)
+        toks[0, :real] = req.prompt[start : start + real]
+        table_row = jnp.asarray(
+            req.alloc.table_row(self.max_blocks_per_seq), jnp.int32
+        )
+        with self._mesh_ctx():
+            logits, (self._k_pool, self._v_pool) = self._prefill_chunk(
+                self.params,
+                jnp.asarray(toks),
+                self._k_pool,
+                self._v_pool,
+                table_row,
+                jnp.int32(start),
+                jnp.int32(real - 1),
+            )
+        req.prefill_pos = start + real
+        self.stats.prefills += 1
+        self.stats.prefill_tokens += real
+        self.stats.prefill_padding += width - real
+        if not req.prefill_done:
+            return False
+
+        tok = int(self._pick_one(logits[0, -1], req, len(req.output)))
+        req.output.append(tok)
+        slot = req.slot
+        self._tables[slot] = req.alloc.table_row(self.max_blocks_per_seq)
+        self._lengths[slot] = req.prompt_len
+        self._last_tok[slot] = tok
+        self.stats.generated_tokens += 1
+        return True
+
     def _do_decode(self, step: int) -> List[Request]:
         token = jnp.asarray(self._last_tok[:, None])
-        logits, (self._k_pool, self._v_pool) = self._decode(
-            self.params, token, self._k_pool, self._v_pool,
-            jnp.asarray(self._tables), jnp.asarray(self._lengths))
+        with self._mesh_ctx():
+            logits, (self._k_pool, self._v_pool) = self._decode(
+                self.params,
+                token,
+                self._k_pool,
+                self._v_pool,
+                jnp.asarray(self._tables),
+                jnp.asarray(self._lengths),
+            )
         logits = np.asarray(logits[:, 0], np.float32)
 
         finished = []
-        running = list(self.scheduler.running.items())
+        active = [
+            (slot, req)
+            for slot, req in self.scheduler.running.items()
+            if req.prefill_done
+        ]
         self.stats.decode_steps += 1
-        self.stats.active_slot_steps += len(running)
-        self.stats.idle_slot_steps += self.pcfg.max_slots - len(running)
-        for slot, req in running:
+        self.stats.active_slot_steps += len(active)
+        self.stats.idle_slot_steps += self.pcfg.max_slots - len(active)
+        for slot, req in active:
             tok = int(self._pick_one(logits[slot], req, len(req.output)))
             req.output.append(tok)
             self._lengths[slot] += 1
@@ -322,6 +569,10 @@ class ContinuousBatchingEngine:
             return int(np.argmax(np.asarray(logits_row)))
         key = jax.random.fold_in(
             jax.random.fold_in(jax.random.PRNGKey(self.pcfg.seed), req.rid),
-            token_idx)
-        return int(jax.random.categorical(
-            key, jnp.asarray(logits_row) / self.pcfg.temperature))
+            token_idx,
+        )
+        return int(
+            jax.random.categorical(
+                key, jnp.asarray(logits_row) / self.pcfg.temperature
+            )
+        )

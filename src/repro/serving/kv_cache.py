@@ -59,8 +59,7 @@ class BlockAllocator:
 
     def allocate(self, n_blocks: int) -> List[int]:
         if not self.can_allocate(n_blocks):
-            raise OutOfBlocksError(
-                f"requested {n_blocks} blocks, {self.num_free} free")
+            raise OutOfBlocksError(f"requested {n_blocks} blocks, {self.num_free} free")
         return [self._free.popleft() for _ in range(n_blocks)]
 
     def free(self, blocks: List[int]) -> None:

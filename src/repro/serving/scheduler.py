@@ -9,6 +9,12 @@ Admission reserves blocks for the WHOLE lifetime up front
 (prompt + max_new_tokens), so an admitted sequence can never run out of
 cache mid-decode and no preemption machinery is needed — the right
 trade at this scale; swap-out/recompute preemption is a later PR.
+
+Chunked prefill does not change admission: a request still reserves all
+its blocks when admitted, and `prefill_pos` tracks how much of the
+prompt has been written so the engine knows when the sequence may start
+decoding.  The scheduler itself is sharding-agnostic — block tables and
+the free list are host-side state, replicated under any mesh.
 """
 from __future__ import annotations
 
@@ -48,23 +54,31 @@ class Request:
     slot: int = -1
     admitted_step: int = -1
     finished_step: int = -1
+    prefill_pos: int = 0  # prompt tokens already written to the KV pool
 
     @property
     def prompt_len(self) -> int:
         return len(self.prompt)
 
+    @property
+    def prefill_done(self) -> bool:
+        """True once the whole prompt is cached (the sequence may decode)."""
+        return self.prefill_pos >= self.prompt_len
+
     def is_done(self) -> bool:
         if len(self.output) >= self.max_new_tokens:
             return True
-        return (self.stop_token is not None and len(self.output) > 0
-                and self.output[-1] == self.stop_token)
+        return (
+            self.stop_token is not None
+            and len(self.output) > 0
+            and self.output[-1] == self.stop_token
+        )
 
 
 class Scheduler:
     """FCFS admission over a fixed slot count and a shared block pool."""
 
-    def __init__(self, allocator: BlockAllocator, max_slots: int,
-                 max_seq_len: int):
+    def __init__(self, allocator: BlockAllocator, max_slots: int, max_seq_len: int):
         self.allocator = allocator
         self.max_slots = max_slots
         self.max_seq_len = max_seq_len
@@ -79,7 +93,8 @@ class Scheduler:
         if total > self.max_seq_len:
             raise ValueError(
                 f"request {req.rid}: prompt+max_new={total} exceeds "
-                f"engine max_seq_len={self.max_seq_len}")
+                f"engine max_seq_len={self.max_seq_len}"
+            )
         need = self.blocks_needed(req)
         pool = self.allocator.num_blocks - 1  # block 0 is reserved
         if need > pool:
@@ -87,7 +102,8 @@ class Scheduler:
             # loop would spin forever on a permanently-waiting head
             raise ValueError(
                 f"request {req.rid}: needs {need} KV blocks but the pool "
-                f"only has {pool}; raise num_blocks or shrink the request")
+                f"only has {pool}; raise num_blocks or shrink the request"
+            )
         self.waiting.append(req)
 
     def blocks_needed(self, req: Request) -> int:

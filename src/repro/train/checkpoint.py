@@ -13,7 +13,7 @@ import os
 import shutil
 import tempfile
 import threading
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import numpy as np

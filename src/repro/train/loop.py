@@ -5,8 +5,7 @@ all-reduce, checkpoint/restart and failure recovery.
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

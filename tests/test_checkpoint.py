@@ -1,5 +1,4 @@
 """Checkpoint substrate: atomicity, GC, manifest, elastic re-placement."""
-import json
 import os
 
 import numpy as np

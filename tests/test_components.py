@@ -3,7 +3,6 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.modes import NumericsConfig
 from repro.models.common import apply_rope, causal_mask

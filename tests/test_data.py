@@ -1,6 +1,5 @@
 """Data pipeline: determinism (the fault-tolerance contract) + structure."""
 import numpy as np
-import jax
 
 from repro.data.synthetic import DataConfig, classification_dataset, image_dataset, lm_batch
 

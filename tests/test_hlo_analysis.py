@@ -2,7 +2,6 @@
 cost model on loop-free programs, and against hand counts on loops."""
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.launch.hlo_analysis import analyze
 

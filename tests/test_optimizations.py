@@ -13,7 +13,6 @@ from repro.models import build
 from repro.models.attention import attn_core, attn_core_blockwise
 from repro.models.common import causal_mask, rmsnorm
 from repro.models.moe import moe_apply, moe_init
-from repro.numerics import P16, quantize
 
 F32 = NumericsConfig(mode="f32")
 

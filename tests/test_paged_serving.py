@@ -142,6 +142,25 @@ def test_unfittable_request_rejected_not_stuck():
         sched.submit(Request(rid=0, prompt=list(range(40)), max_new_tokens=4))
 
 
+def test_admission_when_pool_exactly_full():
+    """A request whose reservation equals the remaining free blocks is
+    admitted (<= not <), draining the pool to exactly zero."""
+    sched, al = _sched(num_blocks=9, block_size=4, max_seq_len=64)
+    # 8 free blocks; prompt 29 + 4 new -> 32 positions = exactly 8 blocks
+    req = Request(rid=0, prompt=list(range(29)), max_new_tokens=4)
+    sched.submit(req)
+    assert sched.blocks_needed(req) == al.num_free == 8
+    assert sched.admit(step=0) == [req]
+    assert al.num_free == 0
+    # the next request waits (pool empty), it is not rejected
+    nxt = Request(rid=1, prompt=[1, 2], max_new_tokens=1)
+    sched.submit(nxt)
+    assert sched.admit(step=0) == []
+    assert nxt.state is RequestState.WAITING
+    sched.retire(req, step=1)
+    assert sched.admit(step=1) == [nxt]
+
+
 # ---------------------------------------------------------------------------
 # paged attention primitive
 # ---------------------------------------------------------------------------
@@ -268,6 +287,79 @@ def test_engine_stop_token(params):
     req = cbe.submit([5, 6, 7], max_new_tokens=32, stop_token=first)
     out = cbe.run()[req.rid]
     assert out[0] == first and len(out) == 1
+
+
+def test_engine_rejects_prompt_larger_than_pool(params):
+    """Engine-level guard: a prompt that can never fit the whole pool
+    raises at submit instead of deadlocking the engine loop."""
+    cbe = ContinuousBatchingEngine(
+        CFG, params=params,
+        pcfg=PagedServeConfig(block_size=4, num_blocks=4, max_slots=2,
+                              max_seq_len=64))
+    with pytest.raises(ValueError, match="KV blocks"):
+        cbe.submit(list(range(40)), max_new_tokens=4)
+
+
+def test_chunked_sequence_finishes_mid_chunk(params):
+    """max_new_tokens=1 with a ragged final chunk: the request finishes
+    at prefill completion (never enters decode), its first token matches
+    the unchunked engine, and its blocks return to the free list."""
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, 97, 13).tolist()  # 2 chunks of 8; ragged tail 5
+
+    def one(chunk):
+        cbe = ContinuousBatchingEngine(
+            CFG, params=params,
+            pcfg=PagedServeConfig(block_size=4, num_blocks=16, max_slots=2,
+                                  max_seq_len=32, prefill_chunk=chunk))
+        req = cbe.submit(prompt, max_new_tokens=1)
+        out = cbe.run()[req.rid]
+        assert cbe.allocator.num_free == 15  # all blocks released
+        assert not cbe.scheduler.has_work()
+        return out
+
+    assert one(0) == one(8)
+
+    # stop_token hit on the very first sampled token: same shape of
+    # mid-chunk finish, via the early-termination path
+    first = one(8)[0]
+    cbe = ContinuousBatchingEngine(
+        CFG, params=params,
+        pcfg=PagedServeConfig(block_size=4, num_blocks=16, max_slots=2,
+                              max_seq_len=32, prefill_chunk=8))
+    req = cbe.submit(prompt, max_new_tokens=8, stop_token=first)
+    out = cbe.run()[req.rid]
+    assert out == [first]
+    assert cbe.allocator.num_free == 15
+
+
+def test_block_reuse_after_retirement_no_aliasing(params):
+    """Blocks freed by a retired sequence are handed to a new one with
+    no stale-KV aliasing: the reuser's tokens equal those it generates
+    on a fresh engine (where its blocks were never written before)."""
+    rng = np.random.default_rng(11)
+    p1 = rng.integers(0, 97, 8).tolist()
+    p2 = rng.integers(0, 97, 6).tolist()
+
+    fresh = ContinuousBatchingEngine(
+        CFG, params=params,
+        pcfg=PagedServeConfig(block_size=4, num_blocks=5, max_slots=2,
+                              max_seq_len=16))
+    ref_req = fresh.submit(p2, max_new_tokens=4)
+    expect = fresh.run()[ref_req.rid]
+
+    cbe = ContinuousBatchingEngine(
+        CFG, params=params,
+        pcfg=PagedServeConfig(block_size=4, num_blocks=5, max_slots=2,
+                              max_seq_len=16))
+    # 4 free blocks; req1 takes 3 => req2 (needs 3) must wait and then
+    # reuse req1's freed blocks
+    r1 = cbe.submit(p1, max_new_tokens=4)
+    r2 = cbe.submit(p2, max_new_tokens=4)
+    done = cbe.run()
+    assert r2.admitted_step > r1.finished_step  # really did wait + reuse
+    assert done[r2.rid] == expect
+    assert cbe.allocator.num_free == 4
 
 
 def test_moe_family_paged(params):

@@ -1,7 +1,6 @@
 """PLAM multiplier tests: paper eqs. (14)-(24), Fig. 4 path, error bound."""
 import numpy as np
 import jax.numpy as jnp
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.numerics import (

@@ -5,7 +5,6 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.numerics import (
-    P8,
     P16,
     PositSpec,
     decode,

@@ -1,6 +1,5 @@
 """Large-scale-runnability substrate: straggler mitigation, elastic
 data-axis resize, decode-attention kernel."""
-import dataclasses
 
 import numpy as np
 import jax

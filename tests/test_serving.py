@@ -69,6 +69,56 @@ def test_engine_greedy_generation(setup):
     np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
 
 
+def test_engine_latency_stats(setup):
+    """The static engine emits the same per-step counters the continuous
+    engine keeps (serve_bench reads them with no guards): step 0 =
+    prefill, then one entry per lockstep decode.  Wall latencies need
+    the opt-in time_steps sync; without it the counters still fill and
+    the percentile helpers degrade to 0.0 instead of raising."""
+    api, params = setup
+    eng = Engine(CFG, params)
+    rng = np.random.default_rng(4)
+    prompt = {"tokens": jnp.asarray(rng.integers(0, 97, (2, 8)).astype(np.int32))}
+    eng.generate(prompt, ServeConfig(max_new_tokens=5, time_steps=True))
+    st = eng.stats
+    assert st.steps == 5 and st.decode_steps == 4 and st.prefills == 1
+    assert len(st.step_latency_s) == 5
+    assert st.generated_tokens == 10  # batch 2 x 5 tokens
+    assert st.prefill_tokens == 16
+    assert st.latency_p95() >= st.latency_p50() > 0.0
+    # stats reset per generate(); default = counters only, no sync
+    eng.generate(prompt, ServeConfig(max_new_tokens=2))
+    assert eng.stats.steps == 2
+    assert eng.stats.step_latency_s == []
+    assert eng.stats.latency_p95() == 0.0
+
+
+def test_engine_encdec_family():
+    """Enc-dec generate: the encoder output is recomputed once from the
+    prompt frames and fed to every decode step (it is not part of the
+    caches prefill returns), and the decoder KV cache is grown so decode
+    writes land past the prompt instead of clamping onto its tail."""
+    cfg = ModelConfig(
+        name="toy-encdec", family="encdec", n_layers=4, enc_layers=2,
+        dec_layers=2, d_model=64, n_heads=4, n_kv=2, head_dim=16, d_ff=128,
+        vocab=61, frontend="audio", frontend_dim=16,
+        numerics=NumericsConfig(mode="f32"),
+        act_dtype="float32", param_dtype="float32",
+    )
+    eng = Engine(cfg)
+    rng = np.random.default_rng(6)
+    prompt = {
+        "frames": jnp.asarray(rng.standard_normal((2, 12, 16)).astype(np.float32)),
+        "tokens": jnp.asarray(rng.integers(0, 61, (2, 6)).astype(np.int32)),
+    }
+    out = eng.generate(prompt, ServeConfig(max_new_tokens=4))
+    assert out.shape == (2, 4)
+    assert np.all((np.asarray(out) >= 0) & (np.asarray(out) < 61))
+    # deterministic across calls (enc cache reset + recomputed per call)
+    out2 = eng.generate(prompt, ServeConfig(max_new_tokens=4))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+
+
 def test_engine_ssm_family():
     cfg = ModelConfig(
         name="toy-ssm", family="ssm", n_layers=2, d_model=64, vocab=61,

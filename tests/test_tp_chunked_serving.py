@@ -1,0 +1,196 @@
+"""Tensor-parallel + chunked-prefill serving (PR 2 acceptance bar).
+
+Greedy decode must be CONFIGURATION-INVARIANT: chunked prefill and
+tensor-parallel sharding are execution strategies, not models, so the
+token streams they produce must match the single-device whole-prompt
+engine exactly.  The tp>1 cases need a multi-device platform, which a
+CPU host only provides via XLA_FLAGS=--xla_force_host_platform_device_count
+set BEFORE jax initializes — those run in a subprocess so the rest of
+the suite keeps its normal single-device jax.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.modes import NumericsConfig
+from repro.models import build
+from repro.serving import ContinuousBatchingEngine, PagedServeConfig
+
+CFG = ModelConfig(
+    name="toy-tp", family="dense", n_layers=2, d_model=32, n_heads=4,
+    n_kv=2, head_dim=8, d_ff=64, vocab=61,
+    numerics=NumericsConfig(mode="posit_quant", n=16, es=1),
+    act_dtype="float32", param_dtype="float32",
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return build(CFG).init(jax.random.PRNGKey(0))
+
+
+def _run_stream(params, prompts, *, max_new=6, tp=1, chunk=0):
+    eng = ContinuousBatchingEngine(
+        CFG, params=params,
+        pcfg=PagedServeConfig(block_size=4, num_blocks=64, max_slots=3,
+                              max_seq_len=32, tp=tp, prefill_chunk=chunk))
+    reqs = [eng.submit(p, max_new_tokens=max_new, arrival_step=i)
+            for i, p in enumerate(prompts)]
+    done = eng.run()
+    return [done[r.rid] for r in reqs], eng
+
+
+def test_chunked_prefill_token_identical(params):
+    """chunk=8 over mixed prompt lengths (shorter than / equal to /
+    spanning multiple chunks, ragged tails) reproduces the unchunked
+    engine's greedy tokens exactly."""
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 61, n).tolist() for n in (3, 9, 8, 17, 5)]
+    base, _ = _run_stream(params, prompts, chunk=0)
+    chunked, eng = _run_stream(params, prompts, chunk=8)
+    assert base == chunked
+    # 17-token prompt = 3 chunks, 9 = 2, rest 1 each => more prefill
+    # calls than requests, and every step's latency was recorded
+    assert eng.stats.prefills > len(prompts)
+    assert len(eng.stats.step_latency_s) == eng.stats.steps
+    assert eng.stats.latency_p95() >= eng.stats.latency_p50() > 0
+
+
+def test_chunked_prefill_interleaves_with_decode(params):
+    """While a long prompt is being chunk-fed, an already-running
+    sequence keeps generating: its finish step precedes the long
+    request's admission+prefill completion."""
+    rng = np.random.default_rng(1)
+    eng = ContinuousBatchingEngine(
+        CFG, params=params,
+        pcfg=PagedServeConfig(block_size=4, num_blocks=64, max_slots=2,
+                              max_seq_len=48, prefill_chunk=4))
+    short = eng.submit(rng.integers(0, 61, 4).tolist(), max_new_tokens=3)
+    long_req = eng.submit(rng.integers(0, 61, 20).tolist(), max_new_tokens=3,
+                          arrival_step=1)
+    eng.run()
+    # the long prompt needs 5 chunk steps; the short request (admitted
+    # step 0) must finish while/<before> those chunks are still feeding
+    assert short.finished_step <= long_req.finished_step - 3
+    assert len(short.output) == 3 and len(long_req.output) == 3
+
+
+def test_chunk_width_must_be_block_multiple(params):
+    with pytest.raises(ValueError, match="multiple of"):
+        ContinuousBatchingEngine(
+            CFG, params=params,
+            pcfg=PagedServeConfig(block_size=4, prefill_chunk=6))
+
+
+def test_tp_requires_devices(params):
+    need = len(jax.devices()) + 1
+    with pytest.raises(ValueError, match="devices"):
+        ContinuousBatchingEngine(
+            CFG, params=params, pcfg=PagedServeConfig(tp=need))
+
+
+def test_model_level_chunk_matches_whole_prefill(params):
+    """Two chunked prefill calls leave the pool bit-identical to one
+    whole-prompt prefill and produce the same final logits."""
+    api = build(CFG)
+    rng = np.random.default_rng(2)
+    plen, bs = 13, 4
+    prompt = rng.integers(0, 61, (1, 16)).astype(np.int32)  # padded to 16
+    prompt[0, plen:] = 0
+    kp0, vp0 = api.paged_pool_init(8, bs, jnp.float32)
+    blocks = jnp.asarray([1, 2, 3, 4], jnp.int32)
+    logits_a, (kp_a, vp_a) = api.paged_prefill(
+        params, jnp.asarray(prompt), kp0, vp0, blocks, jnp.int32(plen))
+
+    kp_b, vp_b = api.paged_pool_init(8, bs, jnp.float32)
+    # chunk 1: tokens [0, 8); chunk 2: ragged [8, 13) padded to 16
+    logits_b = None
+    for start, width in ((0, 8), (8, 8)):
+        toks = np.zeros((1, width), np.int32)
+        real = min(plen - start, width)
+        toks[0, :real] = prompt[0, start:start + real]
+        logits_b, (kp_b, vp_b) = api.paged_prefill_chunk(
+            params, jnp.asarray(toks), kp_b, vp_b, blocks,
+            jnp.int32(start), jnp.int32(real - 1))
+    # same K/V written for all real positions (compare the owned blocks
+    # up to the prompt length; padding slots differ by design)
+    ka = np.asarray(kp_a[:, blocks]).reshape(CFG.n_layers, -1, CFG.n_kv, CFG.hd)
+    kb = np.asarray(kp_b[:, blocks]).reshape(CFG.n_layers, -1, CFG.n_kv, CFG.hd)
+    np.testing.assert_allclose(ka[:, :plen], kb[:, :plen], rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(logits_a), np.asarray(logits_b), rtol=1e-5, atol=1e-5)
+    assert int(np.argmax(np.asarray(logits_a)[0, -1])) == int(
+        np.argmax(np.asarray(logits_b)[0, -1]))
+
+
+_TP_SCRIPT = textwrap.dedent("""
+    import numpy as np, jax
+    from repro.configs.base import ModelConfig
+    from repro.core.modes import NumericsConfig
+    from repro.models import build
+    from repro.serving import ContinuousBatchingEngine, PagedServeConfig
+
+    assert len(jax.devices()) >= 2, jax.devices()
+
+    def stream(cfg, params, tp, chunk, prompts, max_new):
+        eng = ContinuousBatchingEngine(cfg, params=params,
+            pcfg=PagedServeConfig(block_size=4, num_blocks=64, max_slots=3,
+                                  max_seq_len=32, tp=tp, prefill_chunk=chunk))
+        reqs = [eng.submit(p, max_new_tokens=max_new, arrival_step=i)
+                for i, p in enumerate(prompts)]
+        done = eng.run()
+        return [done[r.rid] for r in reqs]
+
+    # kv=2 divides tp=2: head-sharded shard_map decode path
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+        n_heads=4, n_kv=2, head_dim=8, d_ff=64, vocab=61,
+        numerics=NumericsConfig(mode="posit_quant", n=16, es=1),
+        act_dtype="float32", param_dtype="float32")
+    params = build(cfg).init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 61, n).tolist() for n in (3, 9, 17, 6)]
+    base = stream(cfg, params, 1, 0, prompts, 5)
+    tp2 = stream(cfg, params, 2, 8, prompts, 5)
+    assert base == tp2, f"tp2+chunked diverged: {base} vs {tp2}"
+
+    # kv=1 < tp=2: GQA fallback, pool sharded on positions (seq_tp)
+    cfg1 = ModelConfig(name="t1", family="dense", n_layers=2, d_model=32,
+        n_heads=4, n_kv=1, head_dim=8, d_ff=64, vocab=61,
+        numerics=NumericsConfig(mode="posit_quant", n=16, es=1),
+        act_dtype="float32", param_dtype="float32")
+    params1 = build(cfg1).init(jax.random.PRNGKey(1))
+    prompts1 = [rng.integers(0, 61, n).tolist() for n in (5, 11)]
+    base1 = stream(cfg1, params1, 1, 0, prompts1, 4)
+    tp21 = stream(cfg1, params1, 2, 4, prompts1, 4)
+    assert base1 == tp21, f"gqa fallback diverged: {base1} vs {tp21}"
+    print("TP-IDENTICAL-OK")
+""")
+
+
+@pytest.mark.slow
+def test_tp2_chunked_token_identical_forced_devices():
+    """tp=2 + chunked prefill on a forced-8-device CPU mesh is
+    greedy-token-identical to the tp=1 unchunked engine, for both the
+    head-sharded (kv % tp == 0) and GQA-fallback (kv < tp) layouts.
+
+    Runs in a subprocess because the forced device count must be set
+    before jax initializes.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8")
+    env["JAX_PLATFORMS"] = "cpu"
+    src_dir = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src_dir) + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", _TP_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "TP-IDENTICAL-OK" in proc.stdout

@@ -1,7 +1,6 @@
 """Train-loop substrate: learning works, grad-accum is equivalent,
 checkpoint/restart + failure injection recover exactly, int8 gradient
 compression stays unbiased enough to train."""
-import os
 
 import numpy as np
 import jax
@@ -13,7 +12,6 @@ from repro.core.modes import NumericsConfig
 from repro.data.synthetic import DataConfig, lm_batch
 from repro.models import build
 from repro.optim.optimizers import OptConfig, apply_updates, init_state
-from repro.train import checkpoint as ckpt
 from repro.train.loop import FailureInjector, TrainConfig, make_train_step, run
 
 CFG = ModelConfig(
