@@ -5,6 +5,7 @@
   error    — PLAM error bound & distribution (paper Sec. III-C / eq. 24)
   kernels  — Pallas/sim engine micro-benchmarks
   train    — posit16-quantized LM training curve (system-level)
+  numerics — per-site policy accuracy/cost frontier (BENCH_numerics.json)
 
 ``python -m benchmarks.run`` runs everything in quick mode and prints
 CSV blocks; ``--full`` uses the full Table II protocol.
@@ -12,6 +13,7 @@ CSV blocks; ``--full`` uses the full Table II protocol.
 from __future__ import annotations
 
 import argparse
+import json
 
 
 def _section(name):
@@ -48,19 +50,103 @@ def bench_train_quick():
         print(f"{mode},40,{losses[0]:.6f},{losses[-1]:.6f}")
 
 
+def bench_numerics(json_path="BENCH_numerics.json", budget=0.05):
+    """Per-site policy frontier: uniform f32, uniform PLAM, calibrated.
+
+    Trains a small dense LM briefly in f32 (so the loss surface is not
+    random init), then evaluates >= 3 policy points — eval loss, top-1
+    logits agreement vs f32, and the unit-gate multiplier-cost estimate
+    relative to uniform f32 — and runs the greedy calibration sweep.
+    Writes the frontier to ``json_path`` (CI uploads it next to
+    BENCH_serving.json).
+    """
+    import jax
+    from repro.configs.base import ModelConfig
+    from repro.core.policy import parse_policy, policy_to_str
+    from repro.data.synthetic import DataConfig, lm_batch
+    from repro.models import build
+    from repro.numerics.calibrate import calibrate, estimate_cost, top1_agreement
+    from repro.optim.optimizers import OptConfig, init_state
+    from repro.train.loop import TrainConfig, make_train_step
+
+    cfg = ModelConfig(
+        name="bench-dense", family="dense", n_layers=2, d_model=128, n_heads=4,
+        n_kv=2, head_dim=32, d_ff=256, vocab=128,
+    ).with_numerics("default=f32")
+    dcfg = DataConfig(seed=0, vocab=128, seq_len=64, global_batch=16)
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    tcfg = TrainConfig(opt=OptConfig(name="adamw", lr=3e-3))
+    step = jax.jit(make_train_step(api.train_loss, tcfg))
+    state = init_state(tcfg.opt, params)
+    for i in range(30):
+        params, state, _ = step(params, state, lm_batch(dcfg, i))
+    eval_batch = lm_batch(dcfg, 1000)
+
+    def point(name, numerics):
+        pcfg = cfg.with_numerics(numerics)
+        papi = build(pcfg)
+        loss = float(jax.jit(papi.train_loss)(params, eval_batch))
+        logits, _ = jax.jit(papi.prefill)(params, {"tokens": eval_batch["tokens"]})
+        return {
+            "name": name,
+            "policy": policy_to_str(numerics),
+            "loss": loss,
+            "logits": logits,
+            "cost_rel_f32": estimate_cost(cfg, numerics) / cost_f32,
+        }
+
+    cost_f32 = estimate_cost(cfg, parse_policy("default=f32"))
+    # aggressive 8-bit PLAM target with an exact-posit16 fallback: the
+    # 16-bit PLAM matches f32 within any sane budget (the paper's
+    # no-degradation claim), so the interesting frontier point is how
+    # far BELOW 16 bits calibration can push each site
+    res = calibrate(
+        cfg, params, eval_batch, budget=budget,
+        target="plam_sim:8:0", fallback="plam_sim:16:1",
+    )
+    points = [
+        point("uniform_f32", parse_policy("default=f32")),
+        point("uniform_plam16", parse_policy("default=plam_sim:16:1")),
+        point("calibrated_mixed", res.policy),
+    ]
+    ref_logits = points[0].pop("logits")
+    points[0]["top1_agree"] = 1.0
+    for p in points[1:]:
+        p["top1_agree"] = top1_agreement(ref_logits, p.pop("logits"))
+
+    print("name,policy,loss,top1_agree,cost_rel_f32")
+    for p in points:
+        print(f"{p['name']},\"{p['policy']}\",{p['loss']:.6f},"
+              f"{p['top1_agree']:.4f},{p['cost_rel_f32']:.4f}")
+    out = {
+        "model": cfg.name,
+        "budget": budget,
+        "base_loss": res.base_loss,
+        "calibrated_policy": res.policy_str,
+        "decisions": res.decisions,
+        "points": points,
+    }
+    with open(json_path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote {json_path}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
     ap.add_argument("--quick", action="store_true",
-                    help="CI smoke subset: kernels + error sections only")
+                    help="CI smoke subset: kernels + error + numerics sections")
+    ap.add_argument("--numerics-json", default="BENCH_numerics.json",
+                    help="where the numerics section writes its frontier")
     args = ap.parse_args()
 
     def want(name):
         if args.only is not None:
             return args.only == name
         if args.quick:
-            return name in ("kernels", "error")
+            return name in ("kernels", "error", "numerics")
         return True
 
     if want("error"):
@@ -81,6 +167,10 @@ def main() -> None:
     if want("train"):
         _section("train: posit16 LM training parity")
         bench_train_quick()
+
+    if want("numerics"):
+        _section("numerics: per-site policy accuracy/cost frontier")
+        bench_numerics(json_path=args.numerics_json)
 
     if want("table2"):
         _section("table2: DNN inference accuracy (paper Table II)")

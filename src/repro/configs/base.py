@@ -2,9 +2,10 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 from repro.core.modes import NumericsConfig
+from repro.core.policy import NumericsPolicy, parse_policy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,8 +46,9 @@ class ModelConfig:
     frontend: Optional[str] = None  # 'audio' | 'vision' stub frontends
     frontend_dim: int = 0  # dim of precomputed frame/patch embeddings
     mrope_sections: Optional[Tuple[int, int, int]] = None  # qwen2-vl
-    # numerics + dtypes
-    numerics: NumericsConfig = NumericsConfig(mode="bf16")
+    # numerics + dtypes: a uniform NumericsConfig or a per-site
+    # NumericsPolicy (see repro.core.policy for the role taxonomy)
+    numerics: Union[NumericsConfig, NumericsPolicy] = NumericsConfig(mode="bf16")
     param_dtype: str = "float32"
     act_dtype: str = "float32"
     # misc
@@ -61,7 +63,11 @@ class ModelConfig:
     def hd(self) -> int:
         return self.head_dim or (self.d_model // self.n_heads)
 
-    def with_numerics(self, ncfg: NumericsConfig) -> "ModelConfig":
+    def with_numerics(self, ncfg) -> "ModelConfig":
+        """ncfg: NumericsConfig, NumericsPolicy, or a policy string /
+        dict (parsed via repro.core.policy.parse_policy)."""
+        if not isinstance(ncfg, (NumericsConfig, NumericsPolicy)):
+            ncfg = parse_policy(ncfg)
         return dataclasses.replace(self, numerics=ncfg)
 
     def reduced(self) -> "ModelConfig":

@@ -7,7 +7,9 @@ import jax.numpy as jnp
 from .modes import NumericsConfig, nmatmul
 
 
-def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: float | None = None):
+def dense_init(
+    key, d_in: int, d_out: int, dtype=jnp.float32, scale: float | None = None
+):
     scale = scale if scale is not None else d_in ** -0.5
     return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
 

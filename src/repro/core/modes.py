@@ -23,7 +23,14 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.numerics import PositSpec, encode, plam_product_f32, quantize
+from repro.numerics import (
+    PositSpec,
+    decode,
+    encode,
+    plam_product_f32,
+    quantize,
+    unpack16,
+)
 from repro.numerics.plam import mitchell_mul_f32
 
 MODES = ("f32", "bf16", "posit_quant", "plam_sim", "mitchell_f32")
@@ -133,9 +140,41 @@ def _mitchell_matmul_jnp(x, w, chunk: int):
     return acc.reshape(*lead, n)
 
 
+def _pattern_matmul(x, w_pat, ncfg: NumericsConfig, out_dtype):
+    """x @ w where w arrived as pre-encoded posit patterns.
+
+    Prequantized storage (``core.prequant.quantize_params``) carries
+    policy-selected weights as int16/int32 posit patterns.  For
+    ``plam_sim`` the patterns feed ``kernels.ops.plam_dense`` directly
+    — the deployment layout for posit inference (activations encoded on
+    the fly, weights never re-encoded).  Every other mode decodes the
+    patterns back to their exact posit-grid f32 values and reuses the
+    linear-weight path with the per-matmul weight codec skipped
+    (``prequantized_weights=True``), which is value-identical to
+    quantize-on-read.
+    """
+    spec = ncfg.spec
+    bits = unpack16(w_pat) if w_pat.dtype == jnp.int16 else w_pat.astype(jnp.int32)
+    if ncfg.mode == "plam_sim":
+        from repro.kernels.ops import plam_dense  # deferred: pulls in pallas
+
+        out = plam_dense(x.astype(jnp.float32), bits, spec)
+        return out.astype(out_dtype)
+    w_lin = decode(bits, spec)
+    ncfg_pq = dataclasses.replace(ncfg, prequantized_weights=True)
+    return nmatmul(x, w_lin, ncfg_pq, out_dtype=out_dtype)
+
+
 def nmatmul(x, w, ncfg: NumericsConfig, out_dtype=None):
-    """Numerics-aware x @ w; x: [..., K], w: [K, N]."""
+    """Numerics-aware x @ w; x: [..., K], w: [K, N].
+
+    Integer-dtype ``w`` is interpreted as pre-encoded Posit<n,es>
+    patterns (prequantized weight storage) and dispatched through
+    :func:`_pattern_matmul`.
+    """
     out_dtype = out_dtype or x.dtype
+    if jnp.issubdtype(w.dtype, jnp.integer):
+        return _pattern_matmul(x, w, ncfg, out_dtype)
     if ncfg.mode == "f32":
         out = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
     elif ncfg.mode == "bf16":
@@ -149,15 +188,33 @@ def nmatmul(x, w, ncfg: NumericsConfig, out_dtype=None):
             # bf16 end to end: bf16 STE boundary (cotangents + their TP
             # all-reduces stay bf16), bf16 dot output (row-parallel
             # partial-sum all-reduce in bf16); MXU accumulates f32.
-            xq = _quantize_bf16(x, spec) if ncfg.quantize_acts else x.astype(jnp.bfloat16)
-            wq = w.astype(jnp.bfloat16) if ncfg.prequantized_weights else _quantize_bf16(w, spec)
+            xq = (
+                _quantize_bf16(x, spec)
+                if ncfg.quantize_acts
+                else x.astype(jnp.bfloat16)
+            )
+            wq = (
+                w.astype(jnp.bfloat16)
+                if ncfg.prequantized_weights
+                else _quantize_bf16(w, spec)
+            )
             out = jnp.matmul(xq, wq)
         else:
-            xq = quantize(x.astype(jnp.float32), spec) if ncfg.quantize_acts else x.astype(jnp.float32)
-            wq = w.astype(jnp.float32) if ncfg.prequantized_weights else quantize(w.astype(jnp.float32), spec)
+            xq = (
+                quantize(x.astype(jnp.float32), spec)
+                if ncfg.quantize_acts
+                else x.astype(jnp.float32)
+            )
+            wq = (
+                w.astype(jnp.float32)
+                if ncfg.prequantized_weights
+                else quantize(w.astype(jnp.float32), spec)
+            )
             out = jnp.matmul(xq, wq)
     elif ncfg.mode == "plam_sim":
-        out = _plam_matmul_jnp(x.astype(jnp.float32), w.astype(jnp.float32), ncfg.spec, ncfg.plam_chunk)
+        out = _plam_matmul_jnp(
+            x.astype(jnp.float32), w.astype(jnp.float32), ncfg.spec, ncfg.plam_chunk
+        )
     elif ncfg.mode == "mitchell_f32":
         out = _mitchell_matmul_jnp(x, w, ncfg.plam_chunk)
     else:  # pragma: no cover

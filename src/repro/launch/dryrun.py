@@ -16,6 +16,10 @@ Results are appended to experiments/dryrun/<cell>.json.
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+``--numerics-policy`` compiles the cells under a per-site numerics
+policy (string or saved-artifact path); ``--numerics`` stays as the
+single-mode sugar for ``default=<mode>``.
 """
 import argparse
 import json
@@ -27,6 +31,7 @@ from jax.sharding import NamedSharding
 
 from repro.configs import ARCHS, applicable_shapes, get_config, shape_by_name
 from repro.configs.base import ModelConfig, ShapeSpec
+from repro.core.policy import describe, load_policy_arg, parse_policy
 from repro.launch.hlo_analysis import analyze
 from repro.launch.mesh import make_production_mesh
 from repro.models import build
@@ -176,7 +181,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir="experiment
         },
         "lower_s": round(t_lower, 2),
         "compile_s": round(t_compile, 2),
-        "numerics": cfg.numerics.mode,
+        "numerics": describe(cfg.numerics),
         "tag": tag,
     }
     os.makedirs(out_dir, exist_ok=True)
@@ -200,7 +205,18 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--numerics", default=None,
+                    choices=["f32", "bf16", "posit_quant", "plam_sim", "mitchell_f32"],
+                    help="uniform mode; sugar for --numerics-policy 'default=<mode>'")
+    ap.add_argument("--numerics-policy", default=None,
+                    help="per-site policy string or saved-artifact path")
     args = ap.parse_args()
+
+    policy = None
+    if args.numerics_policy is not None:
+        policy = load_policy_arg(args.numerics_policy)
+    elif args.numerics is not None:
+        policy = parse_policy(f"default={args.numerics}")
 
     cells = []
     if args.all:
@@ -214,7 +230,11 @@ def main():
 
     for arch, shape in cells:
         try:
-            rec = run_cell(arch, shape, multi_pod=args.multi_pod, out_dir=args.out_dir)
+            cfg_override = (
+                get_config(arch).with_numerics(policy) if policy is not None else None
+            )
+            rec = run_cell(arch, shape, multi_pod=args.multi_pod,
+                           out_dir=args.out_dir, cfg_override=cfg_override)
             status = "SKIP" if "skipped" in rec else "OK"
             print(f"[{status}] {arch} x {shape} ({'multi' if args.multi_pod else 'single'}): "
                   + (rec.get("skipped") or

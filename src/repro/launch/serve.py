@@ -1,7 +1,15 @@
-"""Serving driver: batched generation under any numerics mode.
+"""Serving driver: batched generation under any numerics mode/policy.
 
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
       --numerics plam_sim --batch 4 --prompt-len 16 --new-tokens 8
+
+``--numerics-policy`` takes a per-site policy string (e.g.
+``"default=plam_sim:16:1, attn=posit_quant:16:1, lm_head=f32"``) or the
+path to a policy artifact saved by ``repro.numerics.calibrate``; the
+single-mode ``--numerics`` flag is kept as sugar for
+``default=<mode>``.  ``--prequantized`` encodes policy-selected weights
+to posit patterns once at engine build (int16 storage, PLAM sites serve
+through ``kernels.ops.plam_dense``).
 
 ``--continuous`` swaps the static batcher for the paged-KV
 continuous-batching engine (dense/moe families), staggering request
@@ -24,7 +32,14 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--numerics", default="plam_sim",
-                    choices=["f32", "bf16", "posit_quant", "plam_sim", "mitchell_f32"])
+                    choices=["f32", "bf16", "posit_quant", "plam_sim", "mitchell_f32"],
+                    help="uniform mode; sugar for --numerics-policy 'default=<mode>'")
+    ap.add_argument("--numerics-policy", default=None,
+                    help="per-site policy string or path to a saved policy "
+                         "artifact (overrides --numerics)")
+    ap.add_argument("--prequantized", action="store_true",
+                    help="encode policy-selected weights to posit patterns "
+                         "once at engine build (serving-time weight storage)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=8)
@@ -57,7 +72,7 @@ def main():
     import jax.numpy as jnp
 
     from repro.configs import ARCHS, get_config
-    from repro.core.modes import NumericsConfig
+    from repro.core.policy import describe, load_policy_arg, parse_policy
     from repro.serving.engine import (
         ContinuousBatchingEngine,
         Engine,
@@ -72,7 +87,12 @@ def main():
     if args.reduced:
         cfg = cfg.reduced()
         cfg = dataclasses.replace(cfg, param_dtype="float32", act_dtype="float32")
-    cfg = cfg.with_numerics(NumericsConfig(mode=args.numerics))
+    if args.numerics_policy is not None:
+        policy = load_policy_arg(args.numerics_policy)
+    else:  # single-mode sugar: default=<mode>
+        policy = parse_policy(f"default={args.numerics}")
+    cfg = cfg.with_numerics(policy)
+    numerics_label = describe(cfg.numerics)
     if cfg.family in ("encdec", "vlm"):
         raise SystemExit("use examples/ for multimodal serving demos")
 
@@ -85,13 +105,14 @@ def main():
                 block_size=8, num_blocks=4 * args.batch * (max_seq // 8 + 2),
                 max_slots=args.batch, max_seq_len=max_seq + 8,
                 temperature=args.temperature, seed=args.seed,
-                tp=args.tp, prefill_chunk=args.prefill_chunk))
+                tp=args.tp, prefill_chunk=args.prefill_chunk,
+                prequantize=args.prequantized))
         reqs = [eng.submit(
             rng.integers(0, cfg.vocab, args.prompt_len).tolist(),
             max_new_tokens=args.new_tokens, arrival_step=i)
             for i in range(args.batch)]
         done = eng.run()
-        print(f"arch={cfg.name} numerics={args.numerics} engine=continuous "
+        print(f"arch={cfg.name} numerics={numerics_label!r} engine=continuous "
               f"tp={args.tp} prefill_chunk={args.prefill_chunk} "
               f"steps={eng.stats.steps} pad_waste={eng.stats.padding_waste():.1%} "
               f"step_p50={eng.stats.latency_p50() * 1e3:.1f}ms "
@@ -102,12 +123,12 @@ def main():
 
     if args.tp > 1 or args.prefill_chunk:
         raise SystemExit("--tp / --prefill-chunk require --continuous")
-    eng = Engine(cfg, key=jax.random.PRNGKey(args.seed))
+    eng = Engine(cfg, key=jax.random.PRNGKey(args.seed), prequantize=args.prequantized)
     prompts = {"tokens": jnp.asarray(
         rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32))}
     out = eng.generate(prompts, ServeConfig(
         max_new_tokens=args.new_tokens, temperature=args.temperature, seed=args.seed))
-    print(f"arch={cfg.name} numerics={args.numerics} "
+    print(f"arch={cfg.name} numerics={numerics_label!r} "
           f"step_p50={eng.stats.latency_p50() * 1e3:.1f}ms "
           f"step_p95={eng.stats.latency_p95() * 1e3:.1f}ms")
     for i, row in enumerate(np.asarray(out)):

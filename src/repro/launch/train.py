@@ -4,6 +4,12 @@ CPU-scale example (reduced config, posit16, fault-tolerant):
   PYTHONPATH=src python -m repro.launch.train --arch yi-6b --reduced \
       --steps 50 --numerics posit_quant --ckpt-dir /tmp/ck --simulate-failure 30
 
+``--numerics-policy`` trains under a per-site policy (string or saved
+artifact); the policy serializes into every checkpoint manifest so
+serving restores the exact numerics.  The single-mode flags
+(--numerics/--posit-n/--posit-es/--carrier) stay as sugar for a
+uniform policy.
+
 On a real cluster the same entry point runs the full config against the
 production mesh (params/optimizer sharded per repro.parallel rules).
 """
@@ -14,9 +20,11 @@ import jax
 
 from repro.configs import ARCHS, get_config
 from repro.core.modes import NumericsConfig
+from repro.core.policy import describe, load_policy_arg
 from repro.data.synthetic import DataConfig, lm_batch
 from repro.models import build
 from repro.optim.optimizers import OptConfig
+from repro.train.checkpoint import policy_extra
 from repro.train.loop import FailureInjector, TrainConfig, run
 
 
@@ -26,7 +34,11 @@ def main():
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--numerics", default="posit_quant",
-                    choices=["f32", "bf16", "posit_quant", "plam_sim", "mitchell_f32"])
+                    choices=["f32", "bf16", "posit_quant", "plam_sim", "mitchell_f32"],
+                    help="uniform mode; sugar for --numerics-policy 'default=<mode>'")
+    ap.add_argument("--numerics-policy", default=None,
+                    help="per-site policy string or saved-artifact path "
+                         "(overrides the single-mode flags)")
     ap.add_argument("--posit-n", type=int, default=16)
     ap.add_argument("--posit-es", type=int, default=1)
     ap.add_argument("--carrier", default="f32", choices=["f32", "bf16"])
@@ -45,13 +57,17 @@ def main():
     if args.reduced:
         cfg = cfg.reduced()
         cfg = dataclasses.replace(cfg, param_dtype="float32", act_dtype="float32")
-    cfg = cfg.with_numerics(NumericsConfig(
-        mode=args.numerics, n=args.posit_n, es=args.posit_es, carrier=args.carrier))
+    if args.numerics_policy is not None:
+        cfg = cfg.with_numerics(load_policy_arg(args.numerics_policy))
+    else:
+        cfg = cfg.with_numerics(NumericsConfig(
+            mode=args.numerics, n=args.posit_n, es=args.posit_es,
+            carrier=args.carrier))
     api = build(cfg)
     n_params = sum(x.size for x in jax.tree.leaves(
         jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0)))))
     print(f"arch={cfg.name}{' (reduced)' if args.reduced else ''} "
-          f"params={n_params/1e6:.1f}M numerics={cfg.numerics.mode}/{args.carrier}")
+          f"params={n_params/1e6:.1f}M numerics={describe(cfg.numerics)!r}")
 
     if cfg.family == "encdec" or cfg.family == "vlm":
         raise SystemExit("use examples/ for multimodal training demos; LM families here")
@@ -63,6 +79,7 @@ def main():
         compress_grads=args.compress_grads,
         ckpt_dir=args.ckpt_dir,
         ckpt_every=args.ckpt_every,
+        ckpt_extra=policy_extra(cfg.numerics),
     )
     failure = FailureInjector([args.simulate_failure]) if args.simulate_failure else None
     _, _, info = run(

@@ -3,6 +3,12 @@
 The attention core (QK^T, AV) runs in bf16/f32 on the MXU; the paper's
 PLAM applies to the *linear layers* (as in its DNN experiments), which
 route through ``repro.core.dense``.  Softmax is f32.
+
+Numerics flow per-site: the q/k/v projections resolve the ``attn.qkv``
+role, the output projection ``attn.out``, and enc-dec cross-attention
+``attn.cross.*`` — so a :class:`~repro.core.policy.NumericsPolicy` can
+run exact-posit attention under PLAM MLPs (or any other mix).  A plain
+:class:`NumericsConfig` still applies uniformly.
 """
 from __future__ import annotations
 
@@ -10,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dense import dense, dense_init
-from repro.core.modes import NumericsConfig
+from repro.core.policy import SiteNumerics, site
 
 from .common import apply_rope, causal_mask
 
@@ -101,7 +107,7 @@ def attn_core_blockwise(q, k, v, *, causal: bool, block: int, softcap=None):
 def attn_apply(
     p,
     x,
-    ncfg: NumericsConfig,
+    ncfg: SiteNumerics,
     *,
     n_heads: int,
     n_kv: int,
@@ -118,9 +124,10 @@ def attn_apply(
     """Returns (out [B,S,d], new_kv) where new_kv is the updated cache
     (if one was passed) or the fresh (k, v) tensors."""
     b, s, _ = x.shape
-    q = _split_heads(dense(x, p["wq"], ncfg), n_heads, head_dim)
-    k = _split_heads(dense(x, p["wk"], ncfg), n_kv, head_dim)
-    v = _split_heads(dense(x, p["wv"], ncfg), n_kv, head_dim)
+    qkv_cfg = site(ncfg, "attn.qkv")
+    q = _split_heads(dense(x, p["wq"], qkv_cfg), n_heads, head_dim)
+    k = _split_heads(dense(x, p["wk"], qkv_cfg), n_kv, head_dim)
+    v = _split_heads(dense(x, p["wv"], qkv_cfg), n_kv, head_dim)
     q = apply_rope(q, positions, rope_theta, mrope_sections)
     k = apply_rope(k, positions, rope_theta, mrope_sections)
 
@@ -147,14 +154,14 @@ def attn_apply(
             out = attn_core(q, k, v, m, softcap)
         new_kv = (k, v)
 
-    out = dense(out.reshape(b, s, n_heads * head_dim), p["wo"], ncfg)
+    out = dense(out.reshape(b, s, n_heads * head_dim), p["wo"], site(ncfg, "attn.out"))
     return out, new_kv
 
 
 def attn_apply_paged(
     p,
     x,
-    ncfg: NumericsConfig,
+    ncfg: SiteNumerics,
     *,
     n_heads: int,
     n_kv: int,
@@ -196,9 +203,10 @@ def attn_apply_paged(
     if softcap is not None:  # softcap models use the monolithic path
         raise NotImplementedError("paged decode does not support logit softcap")
     block_size = k_pages.shape[1]
-    q = _split_heads(dense(x, p["wq"], ncfg), n_heads, head_dim)
-    k = _split_heads(dense(x, p["wk"], ncfg), n_kv, head_dim)
-    v = _split_heads(dense(x, p["wv"], ncfg), n_kv, head_dim)
+    qkv_cfg = site(ncfg, "attn.qkv")
+    q = _split_heads(dense(x, p["wq"], qkv_cfg), n_heads, head_dim)
+    k = _split_heads(dense(x, p["wk"], qkv_cfg), n_kv, head_dim)
+    v = _split_heads(dense(x, p["wv"], qkv_cfg), n_kv, head_dim)
     positions = decode_positions(lengths, mrope=mrope_sections is not None)
     q = apply_rope(q, positions, rope_theta, mrope_sections)
     k = apply_rope(k, positions, rope_theta, mrope_sections)
@@ -213,7 +221,7 @@ def attn_apply_paged(
     out = paged_decode_attention(
         q[:, 0], k_pages, v_pages, block_tables, lengths + 1,
         use_kernel=use_kernel)
-    out = dense(out.reshape(b, 1, n_heads * head_dim), p["wo"], ncfg)
+    out = dense(out.reshape(b, 1, n_heads * head_dim), p["wo"], site(ncfg, "attn.out"))
     return out, (k_pages, v_pages)
 
 
@@ -221,17 +229,20 @@ def cross_attn_init(key, d: int, n_heads: int, n_kv: int, head_dim: int, dtype=j
     return attn_init(key, d, n_heads, n_kv, head_dim, dtype)
 
 
-def cross_attn_apply(p, x, enc_kv, ncfg: NumericsConfig, *, n_heads, n_kv, head_dim):
+def cross_attn_apply(p, x, enc_kv, ncfg: SiteNumerics, *, n_heads, n_kv, head_dim):
     """Decoder cross-attention over precomputed encoder (k, v)."""
     b, s, _ = x.shape
-    q = _split_heads(dense(x, p["wq"], ncfg), n_heads, head_dim)
+    qkv_cfg = site(ncfg, "attn.cross.qkv")
+    q = _split_heads(dense(x, p["wq"], qkv_cfg), n_heads, head_dim)
     k, v = enc_kv
     m = jnp.ones((s, k.shape[1]), bool)
     out = attn_core(q, k, v, m)
-    return dense(out.reshape(b, s, n_heads * head_dim), p["wo"], ncfg)
+    out_cfg = site(ncfg, "attn.cross.out")
+    return dense(out.reshape(b, s, n_heads * head_dim), p["wo"], out_cfg)
 
 
-def encode_cross_kv(p, enc_out, ncfg: NumericsConfig, *, n_kv, head_dim):
-    k = _split_heads(dense(enc_out, p["wk"], ncfg), n_kv, head_dim)
-    v = _split_heads(dense(enc_out, p["wv"], ncfg), n_kv, head_dim)
+def encode_cross_kv(p, enc_out, ncfg: SiteNumerics, *, n_kv, head_dim):
+    qkv_cfg = site(ncfg, "attn.cross.qkv")
+    k = _split_heads(dense(enc_out, p["wk"], qkv_cfg), n_kv, head_dim)
+    v = _split_heads(dense(enc_out, p["wv"], qkv_cfg), n_kv, head_dim)
     return k, v

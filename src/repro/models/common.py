@@ -111,3 +111,40 @@ def stack_layer_params(init_one, key, n_layers: int):
     """vmap a per-layer init over layer keys -> stacked [L, ...] pytree."""
     keys = jax.random.split(key, n_layers)
     return jax.vmap(init_one)(keys)
+
+
+def tree_slice(tree, start: int, size: int, axis: int = 0):
+    """Static slice of every leaf of a stacked-[L] pytree."""
+    return jax.tree.map(
+        lambda a: jax.lax.slice_in_dim(a, start, start + size, axis=axis), tree
+    )
+
+
+def scan_policy_segments(
+    numerics, n_layers, layer_params, caches, x, scan_segment, *, start=0, size=None
+):
+    """Run a layer-stack scan split into policy-uniform segments.
+
+    Shared scaffolding for every backbone: layer-range numerics rules
+    split ``[start, start + size)`` into segments
+    (``core.policy.layer_segments``); each segment's slice of the
+    stacked params (and caches) is scanned by ``scan_segment(x,
+    seg_params, seg_caches, nsite) -> (x, new_caches_or_None)`` and the
+    per-segment caches are concatenated back on the stack axis.  A
+    layer-uniform policy is a single segment driving the exact
+    unsegmented scan — the bit-identity pin relies on that.
+    """
+    from repro.core.policy import layer_segments
+
+    segments = layer_segments(numerics, n_layers, start, size)
+    if len(segments) == 1:
+        return scan_segment(x, layer_params, caches, segments[0][2])
+    outs = []
+    for seg_start, seg_size, nsite in segments:
+        sp = tree_slice(layer_params, seg_start, seg_size)
+        sc = None if caches is None else tree_slice(caches, seg_start, seg_size)
+        x, nc = scan_segment(x, sp, sc, nsite)
+        outs.append(nc)
+    if outs[0] is None:
+        return x, None
+    return x, jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *outs)

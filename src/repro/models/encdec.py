@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.dense import dense_init
+from repro.core.policy import bind, site_for
 from repro.parallel.sharding import constrain
 
 from .attention import attn_apply, attn_init, cross_attn_apply, encode_cross_kv
@@ -54,22 +55,31 @@ def encdec_init(cfg: ModelConfig, key):
 
 
 def encode(cfg: ModelConfig, params, frames):
-    """frames: [B, S_src, frontend_dim] precomputed (stub frontend)."""
+    """frames: [B, S_src, frontend_dim] precomputed (stub frontend).
+
+    Enc/dec stacks resolve their numerics sites layer-free (layer-range
+    policy rules target decoder-only LM depth; see docs/numerics.md).
+    """
     from repro.core.dense import dense
 
-    x = dense(frames.astype(jnp.dtype(cfg.act_dtype)), params["frontend_proj"], cfg.numerics)
+    nsite = bind(cfg.numerics)
+    x = dense(
+        frames.astype(jnp.dtype(cfg.act_dtype)),
+        params["frontend_proj"],
+        site_for(cfg.numerics, "frontend"),
+    )
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
     x = constrain(x, "batch", None, None)
 
     def body(x, lp):
         h, _ = attn_apply(
-            lp["attn"], rmsnorm(lp["ln1"], x), cfg.numerics,
+            lp["attn"], rmsnorm(lp["ln1"], x), nsite,
             n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
             positions=positions, rope_theta=cfg.rope_theta, mask="full",
         )
         x = x + h
-        x = x + mlp_apply(lp["mlp"], rmsnorm(lp["ln2"], x), cfg.numerics, cfg.act)
+        x = x + mlp_apply(lp["mlp"], rmsnorm(lp["ln2"], x), nsite, cfg.act)
         return constrain(x, "batch", None, None), None
 
     x, _ = jax.lax.scan(body, x, params["enc_layers"])
@@ -78,6 +88,7 @@ def encode(cfg: ModelConfig, params, frames):
 
 def _decoder(cfg, params, y_embeds, positions, enc_out, kv_caches=None, cache_len=None):
     x = constrain(y_embeds, "batch", None, None)
+    nsite = bind(cfg.numerics)
 
     def body(carry, scanned):
         x = carry
@@ -88,18 +99,20 @@ def _decoder(cfg, params, y_embeds, positions, enc_out, kv_caches=None, cache_le
             lp, ck, cv = scanned
             kv_slice = (ck, cv)
         h, new_kv = attn_apply(
-            lp["attn"], rmsnorm(lp["ln1"], x), cfg.numerics,
+            lp["attn"], rmsnorm(lp["ln1"], x), nsite,
             n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
             positions=positions, rope_theta=cfg.rope_theta,
             kv_cache=kv_slice, cache_len=cache_len, mask="causal",
         )
         x = x + h
-        enc_kv = encode_cross_kv(lp["xattn"], enc_out, cfg.numerics, n_kv=cfg.n_kv, head_dim=cfg.hd)
+        enc_kv = encode_cross_kv(
+            lp["xattn"], enc_out, nsite, n_kv=cfg.n_kv, head_dim=cfg.hd
+        )
         x = x + cross_attn_apply(
-            lp["xattn"], rmsnorm(lp["ln_x"], x), enc_kv, cfg.numerics,
+            lp["xattn"], rmsnorm(lp["ln_x"], x), enc_kv, nsite,
             n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
         )
-        x = x + mlp_apply(lp["mlp"], rmsnorm(lp["ln2"], x), cfg.numerics, cfg.act)
+        x = x + mlp_apply(lp["mlp"], rmsnorm(lp["ln2"], x), nsite, cfg.act)
         x = constrain(x, "batch", None, None)
         return x, (None if kv_caches is None else new_kv)
 
@@ -142,7 +155,8 @@ def prefill(cfg: ModelConfig, params, frames, tokens, kv_caches):
     )
     from repro.core.dense import dense
 
-    logits = dense(hidden[:, -1:, :], params["unembed"], cfg.numerics)
+    head_cfg = site_for(cfg.numerics, "lm_head")
+    logits = dense(hidden[:, -1:, :], params["unembed"], head_cfg)
     return logits, new_caches
 
 
@@ -155,5 +169,6 @@ def decode_step(cfg: ModelConfig, params, token, enc_out, kv_caches, cache_len):
     )
     from repro.core.dense import dense
 
-    logits = dense(hidden, params["unembed"], cfg.numerics)
+    head_cfg = site_for(cfg.numerics, "lm_head")
+    logits = dense(hidden, params["unembed"], head_cfg)
     return logits, new_caches

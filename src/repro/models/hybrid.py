@@ -17,10 +17,18 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.dense import dense, dense_init
+from repro.core.policy import bind, site, site_for
 from repro.parallel.sharding import constrain
 
 from .attention import attn_apply, attn_init
-from .common import embed_init, rmsnorm, rmsnorm_init, stack_layer_params
+from .common import (
+    embed_init,
+    rmsnorm,
+    rmsnorm_init,
+    scan_policy_segments,
+    stack_layer_params,
+    tree_slice,
+)
 from .mlp import mlp_apply, mlp_init
 from .ssm import mamba2_apply, mamba2_cache_init, mamba2_init
 from .transformer import lm_loss_chunked
@@ -67,38 +75,48 @@ def n_shared_invocations(cfg: ModelConfig) -> int:
 
 
 def _shared_block(cfg, sp, x, x0, positions, kv_slice, cache_len):
-    """Concat(hidden, embeds) -> shared attn + MLP -> proj back to d."""
+    """Concat(hidden, embeds) -> shared attn + MLP -> proj back to d.
+
+    The block is SHARED across invocations (one set of weights), so its
+    sites resolve layer-free; the down-projection back to d_model is
+    the ``hybrid.proj`` site.
+    """
     d2 = 2 * cfg.d_model
+    nsite = bind(cfg.numerics, None, cfg.n_layers)
     cat = jnp.concatenate([x, x0], axis=-1)
     h, new_kv = attn_apply(
-        sp["attn"], rmsnorm(sp["ln1"], cat), cfg.numerics,
+        sp["attn"], rmsnorm(sp["ln1"], cat), nsite,
         n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=d2 // cfg.n_heads,
         positions=positions, rope_theta=cfg.rope_theta,
         kv_cache=kv_slice, cache_len=cache_len,
     )
     cat = cat + h
-    cat = cat + mlp_apply(sp["mlp"], rmsnorm(sp["ln2"], cat), cfg.numerics, cfg.act)
-    return x + dense(cat, sp["out_proj"], cfg.numerics), new_kv
+    cat = cat + mlp_apply(sp["mlp"], rmsnorm(sp["ln2"], cat), nsite, cfg.act)
+    return x + dense(cat, sp["out_proj"], site(nsite, "hybrid.proj")), new_kv
 
 
-def _scan_group(cfg, group_params, x, caches):
-    """Scan a stacked group of mamba layers.  caches: pytree [G,...] or None."""
-    def body(x, scanned):
-        if caches is None:
-            lp, c = scanned, None
-        else:
-            lp, c = scanned
-        h, new_c = mamba2_apply(lp["mamba"], rmsnorm(lp["ln"], x), cfg.numerics,
-                                cache=c, **_ssm_kw(cfg))
-        return constrain(x + h, "batch", None, None), new_c
+def _scan_group(cfg, group_params, x, caches, start_layer: int, group_size: int):
+    """Scan a stacked group of mamba layers (absolute layers
+    [start_layer, start_layer + group_size)), segmenting on layer-range
+    numerics rules.  caches: pytree [G,...] or None."""
 
-    xs = group_params if caches is None else (group_params, caches)
-    x, new_caches = jax.lax.scan(body, x, xs)
-    return x, new_caches
+    def scan_segment(x, seg_params, seg_caches, nsite):
+        def body(x, scanned):
+            if seg_caches is None:
+                lp, c = scanned, None
+            else:
+                lp, c = scanned
+            h, new_c = mamba2_apply(lp["mamba"], rmsnorm(lp["ln"], x), nsite,
+                                    cache=c, **_ssm_kw(cfg))
+            return constrain(x + h, "batch", None, None), new_c
 
+        xs = seg_params if seg_caches is None else (seg_params, seg_caches)
+        return jax.lax.scan(body, x, xs)
 
-def _slice_layers(params_layers, start, size):
-    return jax.tree.map(lambda a: jax.lax.slice_in_dim(a, start, start + size, axis=0), params_layers)
+    return scan_policy_segments(
+        cfg.numerics, cfg.n_layers, group_params, caches, x, scan_segment,
+        start=start_layer, size=group_size,
+    )
 
 
 def hybrid_backbone(cfg: ModelConfig, params, embeds, positions, caches=None, cache_len=None):
@@ -111,10 +129,10 @@ def hybrid_backbone(cfg: ModelConfig, params, embeds, positions, caches=None, ca
     new_ssm, new_k, new_v = [], [], []
     layer = 0
     for inv in range(n_inv):
-        gp = _slice_layers(params["layers"], layer, every)
+        gp = tree_slice(params["layers"], layer, every)
         gc = None if caches is None else jax.tree.map(
             lambda a: jax.lax.slice_in_dim(a, layer, layer + every, axis=0), caches["ssm"])
-        x, nc = _scan_group(cfg, gp, x, gc)
+        x, nc = _scan_group(cfg, gp, x, gc, layer, every)
         if caches is not None:
             new_ssm.append(nc)
         kv_slice = None if caches is None else (caches["shared_k"][inv], caches["shared_v"][inv])
@@ -125,10 +143,10 @@ def hybrid_backbone(cfg: ModelConfig, params, embeds, positions, caches=None, ca
         layer += every
     rem = cfg.n_layers - layer
     if rem:
-        gp = _slice_layers(params["layers"], layer, rem)
+        gp = tree_slice(params["layers"], layer, rem)
         gc = None if caches is None else jax.tree.map(
             lambda a: jax.lax.slice_in_dim(a, layer, layer + rem, axis=0), caches["ssm"])
-        x, nc = _scan_group(cfg, gp, x, gc)
+        x, nc = _scan_group(cfg, gp, x, gc, layer, rem)
         if caches is not None:
             new_ssm.append(nc)
     x = rmsnorm(params["ln_f"], x)
@@ -162,12 +180,16 @@ def train_loss(cfg: ModelConfig, params, batch):
     return lm_loss_chunked(cfg, {"unembed": params["unembed"]}, hidden, batch["labels"])
 
 
+def _head_cfg(cfg: ModelConfig):
+    return site_for(cfg.numerics, "lm_head", n_layers=cfg.n_layers)
+
+
 def prefill(cfg: ModelConfig, params, tokens, caches):
     b, s = tokens.shape
     x = params["embed"][tokens].astype(jnp.dtype(cfg.act_dtype))
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
     hidden, new_caches = hybrid_backbone(cfg, params, x, positions, caches, jnp.int32(0))
-    logits = dense(hidden[:, -1:, :], params["unembed"], cfg.numerics)
+    logits = dense(hidden[:, -1:, :], params["unembed"], _head_cfg(cfg))
     return logits, new_caches
 
 
@@ -176,5 +198,5 @@ def decode_step(cfg: ModelConfig, params, token, caches, cache_len):
     x = params["embed"][token].astype(jnp.dtype(cfg.act_dtype))
     positions = jnp.broadcast_to(cache_len + jnp.zeros((b, 1), jnp.int32), (b, 1))
     hidden, new_caches = hybrid_backbone(cfg, params, x, positions, caches, cache_len)
-    logits = dense(hidden, params["unembed"], cfg.numerics)
+    logits = dense(hidden, params["unembed"], _head_cfg(cfg))
     return logits, new_caches

@@ -1,4 +1,9 @@
-"""Attention-free Mamba2 LM (mamba2-780m)."""
+"""Attention-free Mamba2 LM (mamba2-780m).
+
+Numerics sites: ``ssm.proj.in`` / ``ssm.proj.out`` inside each block,
+``lm_head`` for the unembedding.  Layer-range policy rules segment the
+layer scan exactly as in the transformer backbone.
+"""
 from __future__ import annotations
 
 import jax
@@ -6,9 +11,16 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.dense import dense, dense_init
+from repro.core.policy import site_for
 from repro.parallel.sharding import constrain
 
-from .common import embed_init, rmsnorm, rmsnorm_init, stack_layer_params
+from .common import (
+    embed_init,
+    rmsnorm,
+    rmsnorm_init,
+    scan_policy_segments,
+    stack_layer_params,
+)
 from .ssm import mamba2_apply, mamba2_cache_init, mamba2_init
 from .transformer import lm_loss_chunked
 
@@ -41,16 +53,23 @@ def mamba_lm_init(cfg: ModelConfig, key):
 def backbone(cfg: ModelConfig, params, embeds, caches=None):
     x = constrain(embeds, "batch", None, None)
 
-    def body(x, scanned):
-        if caches is None:
-            lp, c = scanned, None
-        else:
-            lp, c = scanned
-        h, nc = mamba2_apply(lp["mamba"], rmsnorm(lp["ln"], x), cfg.numerics, cache=c, **_kw(cfg))
-        return constrain(x + h, "batch", None, None), nc
+    def scan_segment(x, layer_params, seg_caches, nsite):
+        def body(x, scanned):
+            if seg_caches is None:
+                lp, c = scanned, None
+            else:
+                lp, c = scanned
+            h, nc = mamba2_apply(
+                lp["mamba"], rmsnorm(lp["ln"], x), nsite, cache=c, **_kw(cfg)
+            )
+            return constrain(x + h, "batch", None, None), nc
 
-    xs = params["layers"] if caches is None else (params["layers"], caches)
-    x, new_caches = jax.lax.scan(body, x, xs)
+        xs = layer_params if seg_caches is None else (layer_params, seg_caches)
+        return jax.lax.scan(body, x, xs)
+
+    x, new_caches = scan_policy_segments(
+        cfg.numerics, cfg.n_layers, params["layers"], caches, x, scan_segment
+    )
     return rmsnorm(params["ln_f"], x), (None if caches is None else new_caches)
 
 
@@ -67,10 +86,14 @@ def cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
     return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (cfg.n_layers, *a.shape)).copy(), one)
 
 
+def _head_cfg(cfg: ModelConfig):
+    return site_for(cfg.numerics, "lm_head", n_layers=cfg.n_layers)
+
+
 def prefill(cfg: ModelConfig, params, tokens, caches):
     x = params["embed"][tokens].astype(jnp.dtype(cfg.act_dtype))
     hidden, new_caches = backbone(cfg, params, x, caches)
-    logits = dense(hidden[:, -1:, :], params["unembed"], cfg.numerics)
+    logits = dense(hidden[:, -1:, :], params["unembed"], _head_cfg(cfg))
     return logits, new_caches
 
 
@@ -78,5 +101,5 @@ def decode_step(cfg: ModelConfig, params, token, caches, cache_len):
     del cache_len  # SSM state is position-free
     x = params["embed"][token].astype(jnp.dtype(cfg.act_dtype))
     hidden, new_caches = backbone(cfg, params, x, caches)
-    logits = dense(hidden, params["unembed"], cfg.numerics)
+    logits = dense(hidden, params["unembed"], _head_cfg(cfg))
     return logits, new_caches

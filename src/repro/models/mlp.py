@@ -1,11 +1,11 @@
-"""Gated / plain MLP blocks, numerics-aware."""
+"""Gated / plain MLP blocks, numerics-aware (sites ``mlp.{up,gate,down}``)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.dense import dense, dense_init
-from repro.core.modes import NumericsConfig
+from repro.core.policy import SiteNumerics, site
 
 ACTS = {
     "silu": jax.nn.silu,
@@ -23,11 +23,13 @@ def mlp_init(key, d: int, d_ff: int, glu: bool, dtype=jnp.float32):
     return p
 
 
-def mlp_apply(p, x, ncfg: NumericsConfig, act: str = "silu"):
+def mlp_apply(p, x, ncfg: SiteNumerics, act: str = "silu", role: str = "mlp"):
+    """``role`` prefixes the site tags — MoE shared experts pass
+    ``"moe.shared"`` so a policy can target them separately."""
     fn = ACTS[act]
-    up = dense(x, p["wu"], ncfg)
+    up = dense(x, p["wu"], site(ncfg, f"{role}.up"))
     if "wg" in p:
-        up = fn(dense(x, p["wg"], ncfg)) * up
+        up = fn(dense(x, p["wg"], site(ncfg, f"{role}.gate"))) * up
     else:
         up = fn(up)
-    return dense(up, p["wd"], ncfg)
+    return dense(up, p["wd"], site(ncfg, f"{role}.down"))

@@ -9,6 +9,11 @@ expert FFN matmuls are numerics-aware (PLAM / posit-quant).
 
 Supports DeepSeekMoE-style shared experts (always-on) alongside the
 routed ones.
+
+Numerics sites: ``moe.router`` (baseline policy rule keeps it exact
+f32 — routing is control flow — unless a policy explicitly overrides
+it), ``moe.expert.{up,gate,down}`` for the routed FFNs and
+``moe.shared.{up,gate,down}`` for the shared experts.
 """
 from __future__ import annotations
 
@@ -16,7 +21,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dense import dense_init
-from repro.core.modes import NumericsConfig, nmatmul
+from repro.core.modes import nmatmul
+from repro.core.policy import SiteNumerics, site
 
 from .mlp import ACTS, mlp_apply, mlp_init
 
@@ -62,11 +68,14 @@ def _dispatch_group(xf, router_logits, ncfg, p, *, n_experts, top_k, cap, act):
     buf = jnp.zeros((n_experts, cap, d), xf.dtype).at[eid_f, pos_c].add(contrib)
 
     fn = ACTS[act]
+    up_cfg = site(ncfg, "moe.expert.up")
+    gate_cfg = site(ncfg, "moe.expert.gate")
+    down_cfg = site(ncfg, "moe.expert.down")
 
     def expert(xe, wg, wu, wd):
-        up = nmatmul(xe, wu, ncfg, out_dtype=xe.dtype)
-        up = fn(nmatmul(xe, wg, ncfg, out_dtype=xe.dtype)) * up
-        return nmatmul(up, wd, ncfg, out_dtype=xe.dtype)
+        up = nmatmul(xe, wu, up_cfg, out_dtype=xe.dtype)
+        up = fn(nmatmul(xe, wg, gate_cfg, out_dtype=xe.dtype)) * up
+        return nmatmul(up, wd, down_cfg, out_dtype=xe.dtype)
 
     out_buf = jax.vmap(expert)(buf, p["wg"], p["wu"], p["wd"])  # [E, C, d]
 
@@ -78,7 +87,7 @@ def _dispatch_group(xf, router_logits, ncfg, p, *, n_experts, top_k, cap, act):
 def moe_apply(
     p,
     x,
-    ncfg: NumericsConfig,
+    ncfg: SiteNumerics,
     *,
     n_experts: int,
     top_k: int,
@@ -97,7 +106,10 @@ def moe_apply(
     b, s, d = x.shape
     t = b * s
     xf = x.reshape(t, d)
-    logits = nmatmul(xf, p["router"], NumericsConfig(mode="f32"), out_dtype=jnp.float32)
+    # the router goes through the policy resolver; the built-in
+    # ``moe.router=f32`` baseline rule reproduces the old inline
+    # NumericsConfig(mode="f32") escape hatch unless overridden
+    logits = nmatmul(xf, p["router"], site(ncfg, "moe.router"), out_dtype=jnp.float32)
 
     g = groups if t % max(groups, 1) == 0 else 1
     tg = t // g
@@ -118,7 +130,7 @@ def moe_apply(
         combined = combined.reshape(t, d)
 
     if "shared" in p:
-        combined = combined + mlp_apply(p["shared"], xf, ncfg, act)
+        combined = combined + mlp_apply(p["shared"], xf, ncfg, act, role="moe.shared")
     return combined.reshape(b, s, d)
 
 

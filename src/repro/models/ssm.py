@@ -9,6 +9,10 @@ intra-chunk term rides the MXU, and the sequential part is S/Q steps
 instead of S.
 
 Single-token decode uses the O(1) recurrence directly.
+
+Numerics sites: the input projection is ``ssm.proj.in``, the output
+projection ``ssm.proj.out`` (the conv and state recurrence stay exact —
+PLAM applies to the linear layers, as in the paper's DNN experiments).
 """
 from __future__ import annotations
 
@@ -16,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dense import dense, dense_init
-from repro.core.modes import NumericsConfig
+from repro.core.policy import SiteNumerics, site
 
 from .common import rmsnorm, rmsnorm_init
 
@@ -125,7 +129,7 @@ def _ssd_chunked(xh, bs, cs, dt, a_log, chunk: int):
 def mamba2_apply(
     p,
     x,
-    ncfg: NumericsConfig,
+    ncfg: SiteNumerics,
     *,
     expand: int,
     head_dim: int,
@@ -139,7 +143,7 @@ def mamba2_apply(
     """
     bsz, s, d_model = x.shape
     di, nh = mamba2_dims(d_model, expand, head_dim, d_state)
-    proj = dense(x, p["in_proj"], ncfg)
+    proj = dense(x, p["in_proj"], site(ncfg, "ssm.proj.in"))
     z, xin, bsv, csv, dt = jnp.split(
         proj, [di, 2 * di, 2 * di + d_state, 2 * di + 2 * d_state], axis=-1
     )
@@ -179,7 +183,7 @@ def mamba2_apply(
     y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
     y = y.reshape(bsz, s, di).astype(x.dtype)
     y = rmsnorm(p["norm"], y * jax.nn.silu(z))
-    out = dense(y, p["out_proj"], ncfg)
+    out = dense(y, p["out_proj"], site(ncfg, "ssm.proj.out"))
     new_cache = {"h": hfin, "conv": conv_tail}
     return out, new_cache
 

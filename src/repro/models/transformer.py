@@ -8,6 +8,13 @@ GeGLU, MoE, M-RoPE, embedding scaling, head_dim overrides).
 Layer parameters are stacked on a leading [L] axis and scanned, keeping
 the HLO small enough to compile 80-layer models against a 512-device
 mesh.  `remat` wraps the layer body in jax.checkpoint.
+
+Numerics: every matmul resolves a *site* (``attn.qkv``, ``mlp.down``,
+``lm_head``, ...) against ``cfg.numerics`` — a uniform
+:class:`NumericsConfig` or a per-site :class:`NumericsPolicy`.  Layer-
+range policy rules split the scan into policy-uniform segments (a
+single ``lax.scan`` cannot vary static numerics per step); uniform
+policies keep the original single scan, bit-identically.
 """
 from __future__ import annotations
 
@@ -18,10 +25,17 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.dense import dense, dense_init
+from repro.core.policy import site_for
 from repro.parallel.sharding import constrain
 
 from .attention import attn_apply, attn_apply_paged, attn_init
-from .common import embed_init, rmsnorm, rmsnorm_init, stack_layer_params
+from .common import (
+    embed_init,
+    rmsnorm,
+    rmsnorm_init,
+    scan_policy_segments,
+    stack_layer_params,
+)
 from .mlp import mlp_apply, mlp_init
 from .moe import moe_apply, moe_init
 
@@ -56,24 +70,27 @@ def lm_init(cfg: ModelConfig, key):
     return params
 
 
-def _ffn_fwd(cfg: ModelConfig, p, hn):
+def _ffn_fwd(cfg: ModelConfig, nsite, p, hn):
     """The post-attention half of a block (MoE or dense MLP)."""
     if cfg.n_experts:
         return moe_apply(
-            p["moe"], hn, cfg.numerics,
+            p["moe"], hn, nsite,
             n_experts=cfg.n_experts, top_k=cfg.top_k,
             capacity_factor=cfg.capacity_factor, act=cfg.act,
             groups=cfg.moe_groups,
         )
-    return mlp_apply(p["mlp"], hn, cfg.numerics, cfg.act)
+    return mlp_apply(p["mlp"], hn, nsite, cfg.act)
 
 
-def _layer_fwd(cfg: ModelConfig, p, x, positions, kv_slice, cache_len):
-    """One transformer block.  kv_slice None for training (full-seq)."""
+def _layer_fwd(cfg: ModelConfig, nsite, p, x, positions, kv_slice, cache_len):
+    """One transformer block.  kv_slice None for training (full-seq).
+
+    nsite: per-segment site numerics (a NumericsConfig or BoundPolicy).
+    """
     h, new_kv = attn_apply(
         p["attn"],
         rmsnorm(p["ln1"], x),
-        cfg.numerics,
+        nsite,
         n_heads=cfg.n_heads,
         n_kv=cfg.n_kv,
         head_dim=cfg.hd,
@@ -86,47 +103,67 @@ def _layer_fwd(cfg: ModelConfig, p, x, positions, kv_slice, cache_len):
         flash_block=cfg.flash_block,
     )
     x = x + h
-    h2 = _ffn_fwd(cfg, p, rmsnorm(p["ln2"], x))
+    h2 = _ffn_fwd(cfg, nsite, p, rmsnorm(p["ln2"], x))
     x = x + h2
     x = constrain(x, "batch", None, None)
     return x, new_kv
+
+
+def _scan_layers(cfg: ModelConfig, nsite, layer_params, x, positions,
+                 kv_caches, cache_len):
+    """One lax.scan over a policy-uniform run of stacked layers."""
+
+    def body(carry, scanned):
+        x = carry
+        if kv_caches is None:
+            lp = scanned
+            fn = partial(_layer_fwd, cfg, nsite)
+            if cfg.remat:
+                fn = jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+            x, _ = fn(lp, x, positions, None, None)
+            return x, None
+        lp, ck, cv = scanned
+        x, (nk, nv) = _layer_fwd(cfg, nsite, lp, x, positions, (ck, cv), cache_len)
+        return x, (nk, nv)
+
+    if kv_caches is None:
+        x, _ = jax.lax.scan(body, x, layer_params)
+        return x, None
+    return jax.lax.scan(body, x, (layer_params, *kv_caches))
 
 
 def lm_backbone(cfg: ModelConfig, params, embeds, positions, kv_caches=None, cache_len=None):
     """Scan the stacked layers.  Returns (hidden, new_kv_caches).
 
     kv_caches: None for training, else (k[L,B,S,kv,hd], v[L,...]).
+    Layer-range numerics rules split the stack into segments, each
+    scanned under its own resolved configs; a layer-uniform policy is a
+    single segment — the exact original scan.
     """
     x = embeds
     if cfg.scale_embeddings:
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
     x = constrain(x, "batch", None, None)
 
-    def body(carry, scanned):
-        x = carry
-        if kv_caches is None:
-            lp = scanned
-            fn = partial(_layer_fwd, cfg)
-            if cfg.remat:
-                fn = jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
-            x, _ = fn(lp, x, positions, None, None)
-            return x, None
-        lp, ck, cv = scanned
-        x, (nk, nv) = _layer_fwd(cfg, lp, x, positions, (ck, cv), cache_len)
-        return x, (nk, nv)
+    def scan_segment(x, layer_params, seg_caches, nsite):
+        return _scan_layers(
+            cfg, nsite, layer_params, x, positions, seg_caches, cache_len
+        )
 
-    if kv_caches is None:
-        x, _ = jax.lax.scan(body, x, params["layers"])
-        new_caches = None
-    else:
-        x, new_caches = jax.lax.scan(body, x, (params["layers"], *kv_caches))
+    x, new_caches = scan_policy_segments(
+        cfg.numerics, cfg.n_layers, params["layers"], kv_caches, x, scan_segment
+    )
     x = rmsnorm(params["ln_f"], x)
     return x, new_caches
 
 
 def lm_logits(cfg: ModelConfig, params, hidden):
     w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
-    logits = dense(hidden, w.astype(hidden.dtype), cfg.numerics)
+    head_cfg = site_for(cfg.numerics, "lm_head", n_layers=cfg.n_layers)
+    if jnp.issubdtype(w.dtype, jnp.integer):  # prequantized lm_head patterns
+        logits = dense(hidden, w, head_cfg)
+    else:
+        logits = dense(hidden, w.astype(hidden.dtype), head_cfg)
     return constrain(logits, "batch", None, "model")
 
 
@@ -326,31 +363,36 @@ def paged_decode_step(cfg: ModelConfig, params, token, k_pool, v_pool,
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
     x = constrain(x, "batch", None, None)
 
-    def body(x, scanned):
-        lp, ck, cv = scanned
-        h, (nk, nv) = attn_apply_paged(
-            lp["attn"],
-            rmsnorm(lp["ln1"], x),
-            cfg.numerics,
-            n_heads=cfg.n_heads,
-            n_kv=cfg.n_kv,
-            head_dim=cfg.hd,
-            lengths=lengths,
-            k_pages=ck,
-            v_pages=cv,
-            block_tables=block_tables,
-            rope_theta=cfg.rope_theta,
-            mrope_sections=cfg.mrope_sections,
-            softcap=cfg.attn_logit_softcap,
-            use_kernel=use_kernel,
-        )
-        x = x + h
-        h2 = _ffn_fwd(cfg, lp, rmsnorm(lp["ln2"], x))
-        x = x + h2
-        x = constrain(x, "batch", None, None)
-        return x, (nk, nv)
+    def scan_segment(x, layer_params, pools, nsite):
+        def body(x, scanned):
+            lp, ck, cv = scanned
+            h, (nk, nv) = attn_apply_paged(
+                lp["attn"],
+                rmsnorm(lp["ln1"], x),
+                nsite,
+                n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv,
+                head_dim=cfg.hd,
+                lengths=lengths,
+                k_pages=ck,
+                v_pages=cv,
+                block_tables=block_tables,
+                rope_theta=cfg.rope_theta,
+                mrope_sections=cfg.mrope_sections,
+                softcap=cfg.attn_logit_softcap,
+                use_kernel=use_kernel,
+            )
+            x = x + h
+            h2 = _ffn_fwd(cfg, nsite, lp, rmsnorm(lp["ln2"], x))
+            x = x + h2
+            x = constrain(x, "batch", None, None)
+            return x, (nk, nv)
 
-    x, new_pools = jax.lax.scan(body, x, (params["layers"], k_pool, v_pool))
+        return jax.lax.scan(body, x, (layer_params, *pools))
+
+    x, new_pools = scan_policy_segments(
+        cfg.numerics, cfg.n_layers, params["layers"], (k_pool, v_pool), x, scan_segment
+    )
     x = rmsnorm(params["ln_f"], x)
     logits = lm_logits(cfg, params, x)
     return logits, new_pools

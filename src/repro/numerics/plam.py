@@ -134,7 +134,9 @@ def exact_mul(a_bits, b_bits, spec: PositSpec):
     frac = jnp.where(
         ovf == 1,
         prod - I32(1 << (2 * fb + 1)),
-        _shl((prod - I32(1 << (2 * fb))).astype(U32), jnp.full_like(prod, 1)).astype(I32),
+        _shl(
+            (prod - I32(1 << (2 * fb))).astype(U32), jnp.full_like(prod, 1)
+        ).astype(I32),
     ).astype(U32)
     cand = encode_fields(s, scale, frac, 2 * fb + 1, spec)
     return _special(cand, a_bits, b_bits, spec, az, an, bz, bn)

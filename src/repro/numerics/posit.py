@@ -174,11 +174,15 @@ def encode_fields(sign, scale, frac, fbits, spec: PositSpec, fbits_static=None):
     tot = I32(es) + fbits
     shift_out = tot - avail
 
-    kept = jnp.where(shift_out > 0, _shr(combined, shift_out), _shl(combined, -shift_out))
+    kept = jnp.where(
+        shift_out > 0, _shr(combined, shift_out), _shl(combined, -shift_out)
+    )
     round_bit = jnp.where(
         shift_out > 0, _shr(combined, shift_out - 1) & U32(1), U32(0)
     )
-    sticky_mask = jnp.where(shift_out > 1, _shl(jnp.ones_like(combined), shift_out - 1) - U32(1), U32(0))
+    sticky_mask = jnp.where(
+        shift_out > 1, _shl(jnp.ones_like(combined), shift_out - 1) - U32(1), U32(0)
+    )
     sticky = (combined & sticky_mask) != U32(0)
     # ties-to-even on the FULL pattern (regime included): SoftPosit's
     # `ui += bitNPlusOne & (bitsMore | (ui & 1))`

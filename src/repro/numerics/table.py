@@ -64,7 +64,11 @@ def encode_table(x, spec: PositSpec):
     body = j + 1
     body = jnp.where(tie & (body % 2 == 1), body + 1, body)
     body = jnp.clip(body, 1, spec.maxpos_body)
-    pat = jnp.where(sign, (jnp.uint32(0) - body.astype(jnp.uint32)) & jnp.uint32(spec.mask_n), body.astype(jnp.uint32)).astype(I32)
+    pat = jnp.where(
+        sign,
+        (jnp.uint32(0) - body.astype(jnp.uint32)) & jnp.uint32(spec.mask_n),
+        body.astype(jnp.uint32),
+    ).astype(I32)
     pat = jnp.where(a == 0, I32(0), pat)
     pat = jnp.where(jnp.isnan(x32) | jnp.isinf(x32), I32(spec.nar), pat)
     return pat

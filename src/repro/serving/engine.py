@@ -115,7 +115,7 @@ class Engine:
     the deployment pattern when steps stream back to clients).
     """
 
-    def __init__(self, cfg: ModelConfig, params=None, key=None):
+    def __init__(self, cfg: ModelConfig, params=None, key=None, prequantize=False):
         self.cfg = cfg
         self.api: ModelAPI = build(cfg)
         self.params = (
@@ -123,6 +123,11 @@ class Engine:
             if params is not None
             else self.api.init(key if key is not None else jax.random.PRNGKey(0))
         )
+        self.prequant_meta = {}
+        if prequantize:
+            from repro.core.prequant import quantize_params
+
+            self.params, self.prequant_meta = quantize_params(cfg, self.params)
         self._prefill = jax.jit(self.api.prefill)
         self._decode = jax.jit(self.api.decode_step)
         self._enc_cache = None  # encdec: encoder output, fixed per generate()
@@ -258,6 +263,10 @@ class PagedServeConfig:
     use_kernel: Optional[bool] = None  # None = auto (Pallas on TPU)
     tp: int = 1
     prefill_chunk: int = 0
+    # encode policy-selected weights to posit patterns once at engine
+    # construction (core.prequant.quantize_params); plam_sim sites then
+    # serve through kernels.ops.plam_dense with int16 weight storage
+    prequantize: bool = False
 
 
 class ContinuousBatchingEngine:
@@ -325,6 +334,11 @@ class ContinuousBatchingEngine:
             if params is not None
             else self.api.init(key if key is not None else jax.random.PRNGKey(0))
         )
+        self.prequant_meta = {}
+        if pcfg.prequantize:
+            from repro.core.prequant import quantize_params
+
+            self.params, self.prequant_meta = quantize_params(cfg, self.params)
 
         bs, nb = pcfg.block_size, pcfg.num_blocks
         self.max_blocks_per_seq = -(-pcfg.max_seq_len // bs)

@@ -93,6 +93,25 @@ def restore(ckpt_dir: str, like_tree, *, step: Optional[int] = None, shardings=N
     return tree, manifest
 
 
+POLICY_KEY = "numerics_policy"
+
+
+def policy_extra(numerics) -> dict:
+    """Manifest-extra dict carrying a serialized numerics policy."""
+    from repro.core.policy import policy_to_dict
+
+    return {POLICY_KEY: policy_to_dict(numerics)}
+
+
+def manifest_policy(manifest: dict):
+    """Rebuild the NumericsPolicy stored by :func:`policy_extra`, or
+    None when the checkpoint carries no policy metadata."""
+    from repro.core.policy import policy_from_dict
+
+    data = (manifest.get("extra") or {}).get(POLICY_KEY)
+    return None if data is None else policy_from_dict(data)
+
+
 def _gc(ckpt_dir: str, keep: int):
     steps = sorted(
         d for d in os.listdir(ckpt_dir)

@@ -23,6 +23,9 @@ class TrainConfig:
     ckpt_every: int = 50
     log_every: int = 10
     compress_grads: bool = False  # int8 stochastic-rounded gradient exchange
+    # manifest-extra dict stored with every checkpoint (e.g. the
+    # serialized numerics policy: {"numerics_policy": policy_to_dict(p)})
+    ckpt_extra: Optional[dict] = None
 
 
 def _int8_compress(g, key):
@@ -137,7 +140,9 @@ def run(
                 history.append((step, float(metrics["loss"])))
             step += 1
             if tcfg.ckpt_dir and step % tcfg.ckpt_every == 0:
-                ckpt_lib.save(tcfg.ckpt_dir, step, (params, opt_state))
+                ckpt_lib.save(
+                    tcfg.ckpt_dir, step, (params, opt_state), extra=tcfg.ckpt_extra
+                )
         except RuntimeError as e:
             if "[injected]" not in str(e) or restarts >= max_restarts:
                 raise
@@ -148,5 +153,5 @@ def run(
             else:
                 params, opt_state, step = fresh()
     if tcfg.ckpt_dir:
-        ckpt_lib.save(tcfg.ckpt_dir, step, (params, opt_state))
+        ckpt_lib.save(tcfg.ckpt_dir, step, (params, opt_state), extra=tcfg.ckpt_extra)
     return params, opt_state, {"history": history, "restarts": restarts, "final_step": step}

@@ -1,0 +1,103 @@
+"""Greedy mixed-numerics calibration + cost model + policy artifacts."""
+import numpy as np
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core.policy import parse_policy
+from repro.data.synthetic import DataConfig, lm_batch
+from repro.models import build
+from repro.numerics.calibrate import (
+    calibrate,
+    default_candidate_sites,
+    estimate_cost,
+    load_policy_artifact,
+    save_policy_artifact,
+    site_macs,
+    top1_agreement,
+    unit_mult_cost,
+)
+from repro.core.modes import NumericsConfig
+
+DENSE = ModelConfig(family="dense", n_layers=2, d_model=64, n_heads=4, n_kv=2,
+                    head_dim=16, d_ff=128, vocab=128)
+MOE = ModelConfig(family="moe", n_layers=2, d_model=64, n_heads=4, n_kv=2,
+                  head_dim=16, d_ff=128, vocab=128, n_experts=4, top_k=2,
+                  moe_d_ff=64)
+
+
+def test_unit_cost_ordering():
+    """PLAM < exact posit < f32 multiplier cost (the paper's claim at
+    the unit-gate proxy level); narrower PLAM is cheaper still."""
+    f32 = unit_mult_cost(NumericsConfig(mode="f32"))
+    exact16 = unit_mult_cost(NumericsConfig(mode="posit_quant", n=16, es=1))
+    plam16 = unit_mult_cost(NumericsConfig(mode="plam_sim", n=16, es=1))
+    plam8 = unit_mult_cost(NumericsConfig(mode="plam_sim", n=8, es=0))
+    assert plam16 < exact16 < f32
+    assert plam8 < plam16
+
+
+def test_site_macs_and_candidates():
+    macs = site_macs(MOE)
+    assert {"attn.qkv", "attn.out", "moe.router", "moe.expert.up",
+            "lm_head"} <= set(macs)
+    assert all(v > 0 for v in macs.values())
+    groups = default_candidate_sites(MOE)
+    assert "moe.expert" in groups and "attn" in groups and "lm_head" in groups
+    assert "moe.router" not in groups  # the router is never a flip candidate
+
+
+def test_estimate_cost_monotone_in_policy():
+    c_f32 = estimate_cost(DENSE, parse_policy("default=f32"))
+    c_plam = estimate_cost(DENSE, parse_policy("default=plam_sim:16:1"))
+    c_mix = estimate_cost(
+        DENSE, parse_policy("default=f32, mlp=plam_sim:16:1"))
+    assert c_plam < c_mix < c_f32
+
+
+def test_calibrate_within_budget_and_artifact_round_trip(tmp_path):
+    api = build(DENSE)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = lm_batch(DataConfig(seed=0, vocab=128, seq_len=32, global_batch=8), 0)
+    res = calibrate(DENSE, params, batch, budget=0.05)
+    # every decision recorded, and the final policy respects the budget
+    assert {d["site"] for d in res.decisions} == set(default_candidate_sites(DENSE))
+    final_loss = float(jax.jit(
+        build(DENSE.with_numerics(res.policy)).train_loss)(params, batch))
+    assert final_loss <= res.base_loss + abs(res.base_loss) * 0.05 + 1e-6
+    # calibrated policy is never costlier than the all-base policy
+    assert estimate_cost(DENSE, res.policy) <= estimate_cost(
+        DENSE, parse_policy("default=f32"))
+
+    path = str(tmp_path / "policy.json")
+    save_policy_artifact(path, res.policy, {"base_loss": res.base_loss})
+    assert load_policy_artifact(path) == res.policy
+    # the artifact is consumable by the CLI loader too
+    from repro.core.policy import load_policy_arg
+
+    assert load_policy_arg(path) == res.policy
+
+
+def test_zero_budget_keeps_base_policy():
+    """With a (near-)impossible budget every flip that degrades the
+    loss is rejected; the policy stays all-base wherever PLAM hurts."""
+    api = build(DENSE)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = lm_batch(DataConfig(seed=0, vocab=128, seq_len=32, global_batch=8), 0)
+    base = float(jax.jit(
+        build(DENSE.with_numerics(parse_policy("default=f32"))).train_loss
+    )(params, batch))
+    res = calibrate(DENSE, params, batch, budget=0.0,
+                    target="plam_sim:8:0", fallback=None)
+    final = float(jax.jit(
+        build(DENSE.with_numerics(res.policy)).train_loss)(params, batch))
+    assert final <= base + 1e-6
+
+
+def test_top1_agreement():
+    a = np.zeros((2, 3, 5), np.float32)
+    a[..., 1] = 1.0
+    b = a.copy()
+    assert top1_agreement(a, b) == 1.0
+    b[0, 0, 1] = 0.0
+    b[0, 0, 2] = 2.0
+    assert abs(top1_agreement(a, b) - 5 / 6) < 1e-6

@@ -1,0 +1,264 @@
+"""Per-site numerics policy: parsing, resolution, serialization, and
+the end-to-end guarantees pinned by the mixed-numerics refactor:
+
+* a uniform ``default=plam_sim:16:1`` policy is BIT-identical to the
+  pre-refactor flat ``NumericsConfig(mode="plam_sim")`` path;
+* a mixed policy (PLAM MLPs + exact-posit attention + f32
+  router/lm_head) runs through one train step, checkpoint save/load
+  and greedy paged serving;
+* a policy round-trips through checkpoint manifest metadata to
+  bit-identical logits (dense and MoE).
+"""
+import dataclasses
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.modes import NumericsConfig
+from repro.core.policy import (
+    BoundPolicy,
+    NumericsPolicy,
+    layer_segments,
+    load_policy_arg,
+    parse_policy,
+    policy_from_dict,
+    policy_to_dict,
+    policy_to_str,
+    site,
+    site_for,
+)
+from repro.models import build
+
+MIXED = ("default=plam_sim:16:1, attn=posit_quant:16:1, "
+         "moe.router=f32, lm_head=f32")
+
+DENSE = dict(family="dense", n_layers=2, d_model=32, n_heads=2, n_kv=2,
+             head_dim=16, d_ff=64, vocab=50)
+MOE = dict(family="moe", n_layers=2, d_model=32, n_heads=2, n_kv=2,
+           head_dim=16, d_ff=64, vocab=50, n_experts=4, top_k=2,
+           moe_d_ff=32, n_shared_experts=1)
+
+
+def _tokens(b=2, s=12, vocab=50):
+    return jnp.asarray(
+        np.random.default_rng(0).integers(0, vocab, (b, s)).astype(np.int32))
+
+
+def _logits(cfg):
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    logits, _ = api.prefill(params, {"tokens": _tokens(vocab=cfg.vocab)})
+    return np.asarray(logits)
+
+
+# ---------------------------------------------------------------------------
+# resolution semantics
+# ---------------------------------------------------------------------------
+
+def test_default_and_exact_and_group_precedence():
+    p = parse_policy("default=f32, mlp=plam_sim:16:1, mlp.down=posit_quant:8:0")
+    assert p.resolve("attn.qkv").mode == "f32"
+    assert p.resolve("mlp.up").mode == "plam_sim"
+    assert p.resolve("mlp.down").mode == "posit_quant"
+    assert p.resolve("mlp.down").n == 8
+
+
+def test_layer_rules_and_negative_indices():
+    p = parse_policy("default=plam_sim:16:1, layers[0,-1]=posit_quant:16:1")
+    assert p.resolve("mlp.up", 0, 8).mode == "posit_quant"
+    assert p.resolve("mlp.up", 7, 8).mode == "posit_quant"
+    assert p.resolve("mlp.up", 3, 8).mode == "plam_sim"
+    # layer-free sites (lm_head) never match a layers[] rule
+    assert p.resolve("lm_head", None, 8).mode == "plam_sim"
+    # role-specific rules beat layers-only rules
+    p2 = parse_policy("default=f32, layers[0]=plam_sim:16:1, mlp.up=bf16")
+    assert p2.resolve("mlp.up", 0, 4).mode == "bf16"
+
+
+def test_combined_role_at_layers_selector():
+    p = parse_policy("default=f32, attn@layers[2:]=plam_sim:16:1")
+    assert p.resolve("attn.qkv", 3, 4).mode == "plam_sim"
+    assert p.resolve("attn.qkv", 1, 4).mode == "f32"
+    assert p.resolve("mlp.up", 3, 4).mode == "f32"
+
+
+def test_router_baseline_rule():
+    """The old inline f32-router escape hatch is now a policy rule."""
+    # uniform legacy config: router stays exact f32
+    assert site(NumericsConfig(mode="plam_sim"), "moe.router").mode == "f32"
+    # default= does not silently approximate routing
+    p = parse_policy("default=plam_sim:16:1")
+    assert p.resolve("moe.router").mode == "f32"
+    # ...but an explicit moe.router rule does override the baseline
+    p2 = parse_policy("default=f32, moe.router=plam_sim:16:1")
+    assert p2.resolve("moe.router").mode == "plam_sim"
+    # and a moe-group rule does NOT (exact beats group)
+    p3 = parse_policy("default=f32, moe=plam_sim:16:1")
+    assert p3.resolve("moe.router").mode == "f32"
+    assert p3.resolve("moe.expert.up").mode == "plam_sim"
+
+
+def test_missing_default_raises():
+    p = parse_policy("mlp=plam_sim:16:1")
+    with pytest.raises(KeyError):
+        p.resolve("attn.qkv")
+
+
+def test_bare_mode_string_is_uniform():
+    p = parse_policy("plam_sim:16:1")
+    assert p.resolve("attn.qkv").mode == "plam_sim"
+    assert p.resolve("moe.router").mode == "f32"  # baseline survives
+
+
+# ---------------------------------------------------------------------------
+# serialization round trips
+# ---------------------------------------------------------------------------
+
+def test_policy_dict_and_str_round_trip():
+    p = parse_policy(MIXED + ", layers[1:3]=bf16, ssm.proj@layers[-2:]=f32")
+    assert policy_from_dict(policy_to_dict(p)) == p
+    assert parse_policy(policy_to_str(p)) == p
+    # dict form is JSON-safe
+    import json
+    assert policy_from_dict(json.loads(json.dumps(policy_to_dict(p)))) == p
+
+
+def test_load_policy_arg_string_and_path(tmp_path):
+    import json
+
+    p = parse_policy(MIXED)
+    assert load_policy_arg(MIXED) == p
+    path = os.path.join(tmp_path, "pol.json")
+    with open(path, "w") as f:
+        json.dump({"policy": policy_to_dict(p)}, f)
+    assert load_policy_arg(path) == p
+    # a path-shaped argument that does not exist is an error, not a
+    # policy-string fallback (typo'd artifact paths must fail clearly)
+    with pytest.raises(FileNotFoundError):
+        load_policy_arg(os.path.join(tmp_path, "nope.json"))
+
+
+# ---------------------------------------------------------------------------
+# layer segmentation
+# ---------------------------------------------------------------------------
+
+def test_layer_segments_uniform_is_single_scan():
+    nc = NumericsConfig(mode="plam_sim")
+    assert layer_segments(nc, 8) == [(0, 8, nc)]
+    p = parse_policy("default=plam_sim:16:1, attn=f32")
+    segs = layer_segments(p, 8)
+    assert len(segs) == 1 and isinstance(segs[0][2], BoundPolicy)
+
+
+def test_layer_segments_splits_on_layer_rules():
+    p = parse_policy("default=f32, layers[0,-1]=posit_quant:16:1")
+    assert [(a, b) for a, b, _ in layer_segments(p, 8)] == [(0, 1), (1, 6), (7, 1)]
+    # offset windows (hybrid groups) segment in absolute coordinates
+    assert [(a, b) for a, b, _ in layer_segments(p, 8, 6, 2)] == [(0, 1), (1, 1)]
+    assert [(a, b) for a, b, _ in layer_segments(p, 8, 2, 3)] == [(0, 3)]
+
+
+# ---------------------------------------------------------------------------
+# end-to-end pins
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("base", [DENSE, MOE], ids=["dense", "moe"])
+def test_uniform_policy_bit_identical_to_flat_config(base):
+    """Acceptance pin: default=plam_sim:16:1 == NumericsConfig(plam_sim)."""
+    cfg_flat = ModelConfig(**base, numerics=NumericsConfig(mode="plam_sim", n=16, es=1))
+    cfg_pol = ModelConfig(**base).with_numerics("default=plam_sim:16:1")
+    a, b = _logits(cfg_flat), _logits(cfg_pol)
+    assert np.array_equal(a, b)
+
+
+@pytest.mark.parametrize("base", [DENSE, MOE], ids=["dense", "moe"])
+def test_policy_checkpoint_metadata_round_trip(base):
+    """policy string -> policy -> manifest extra -> restored policy
+    produces bit-identical logits."""
+    from repro.train import checkpoint as ckpt
+
+    cfg = ModelConfig(**base).with_numerics(MIXED)
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 0, params, extra=ckpt.policy_extra(cfg.numerics))
+        restored, manifest = ckpt.restore(d, params)
+    policy = ckpt.manifest_policy(manifest)
+    assert policy == parse_policy(MIXED)
+    cfg2 = ModelConfig(**base).with_numerics(policy)
+    api2 = build(cfg2)
+    tok = {"tokens": _tokens()}
+    a = np.asarray(api.prefill(params, tok)[0])
+    b = np.asarray(api2.prefill(restored, tok)[0])
+    assert np.array_equal(a, b)
+
+
+def test_mixed_policy_trains_checkpoints_and_serves():
+    """Acceptance pin: the mixed policy survives one train step,
+    checkpoint save/load, and greedy paged serving."""
+    from repro.optim.optimizers import OptConfig, init_state
+    from repro.serving.engine import ContinuousBatchingEngine, PagedServeConfig
+    from repro.train import checkpoint as ckpt
+    from repro.train.loop import TrainConfig, make_train_step
+
+    cfg = ModelConfig(**MOE).with_numerics(MIXED)
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    tcfg = TrainConfig(opt=OptConfig(name="adamw", lr=1e-3))
+    step = jax.jit(make_train_step(api.train_loss, tcfg))
+    batch = {"tokens": _tokens(2, 16), "labels": _tokens(2, 16)}
+    params, state, metrics = step(params, init_state(tcfg.opt, params), batch)
+    assert np.isfinite(float(metrics["loss"]))
+
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 1, params, extra=ckpt.policy_extra(cfg.numerics))
+        params, _ = ckpt.restore(d, params)
+
+    eng = ContinuousBatchingEngine(
+        cfg, params=params,
+        pcfg=PagedServeConfig(block_size=8, num_blocks=32, max_slots=2,
+                              max_seq_len=40))
+    reqs = [eng.submit(list(range(1, 9)), max_new_tokens=4, arrival_step=i)
+            for i in range(2)]
+    done = eng.run()
+    assert all(len(done[r.rid]) == 4 for r in reqs)
+
+
+def test_layer_range_policy_forward_differs_only_at_selected_layers():
+    """layers[0,-1]=posit_quant changes the result vs uniform f32, and
+    the segmentation matches a manual per-layer construction."""
+    base = dict(DENSE)
+    base["n_layers"] = 3
+    cfg_u = ModelConfig(**base).with_numerics("default=f32")
+    cfg_l = ModelConfig(**base).with_numerics(
+        "default=f32, layers[0,-1]=posit_quant:8:0")
+    a, b = _logits(cfg_u), _logits(cfg_l)
+    assert not np.array_equal(a, b)
+    # resolution check: middle layer stays f32
+    assert site_for(cfg_l.numerics, "mlp.up", 1, 3).mode == "f32"
+    assert site_for(cfg_l.numerics, "mlp.up", 2, 3).mode == "posit_quant"
+
+
+def test_with_numerics_accepts_config_policy_and_string():
+    cfg = ModelConfig(**DENSE)
+    nc = NumericsConfig(mode="f32")
+    assert cfg.with_numerics(nc).numerics == nc
+    p = parse_policy(MIXED)
+    assert cfg.with_numerics(p).numerics == p
+    assert cfg.with_numerics(MIXED).numerics == p
+    assert isinstance(cfg.with_numerics(policy_to_dict(p)).numerics, NumericsPolicy)
+
+
+def test_reduced_config_preserves_policy():
+    from repro.configs import get_config
+
+    cfg = get_config("yi-6b").with_numerics(MIXED).reduced()
+    assert dataclasses.replace(cfg).numerics == parse_policy(MIXED)
