@@ -13,11 +13,13 @@ about) and reports, per engine configuration:
 
 The continuous engine runs a small configuration matrix: tp=1 vs
 tp=<--tp> (when enough devices exist) crossed with unchunked vs
-chunked prefill, and asserts every configuration generates EXACTLY the
-same tokens — the greedy token-identity bar that CI's bench-smoke job
-re-checks on every push.  The bench model serves in plam_sim numerics
-(the paper's approximate multiplier), whose per-matmul quantization
-also keeps greedy argmax invariant to TP reduction-order float noise.
+chunked prefill, plus speculative-decoding rows (``--spec-k``, with
+acceptance rate and committed tokens per verify step), and asserts
+every configuration generates EXACTLY the same tokens — the greedy
+token-identity bar that CI's bench-smoke job re-checks on every push.
+The bench model serves in plam_sim numerics (the paper's approximate
+multiplier), whose per-matmul quantization also keeps greedy argmax
+invariant to TP reduction-order float noise.
 
 Reading the numbers: padding waste is the architectural win and shows
 at any scale.  At toy CPU scale the static batcher can still win raw
@@ -31,7 +33,7 @@ accelerators.
 Run:
   PYTHONPATH=src python benchmarks/serve_bench.py [--requests 12]
   PYTHONPATH=src python benchmarks/serve_bench.py \
-      --tp 2 --prefill-chunk 16 --force-host-devices 8 \
+      --tp 2 --prefill-chunk 16 --spec-k 4 --force-host-devices 8 \
       --json BENCH_serving.json
 """
 from __future__ import annotations
@@ -101,11 +103,12 @@ def bench_static(base_cfg, params, stream):
 
 
 def bench_continuous(base_cfg, params, stream, *, tp=1, prefill_chunk=0,
-                     warmup=True):
+                     spec_k=0, warmup=True):
     from repro.serving import ContinuousBatchingEngine, PagedServeConfig, ServeStats
 
     pcfg = PagedServeConfig(block_size=8, num_blocks=256, max_slots=8,
-                            max_seq_len=128, tp=tp, prefill_chunk=prefill_chunk)
+                            max_seq_len=128, tp=tp, prefill_chunk=prefill_chunk,
+                            spec_k=spec_k)
     eng = ContinuousBatchingEngine(base_cfg, params=params, pcfg=pcfg)
     if warmup:  # compile prefill buckets/chunks + the decode step off the clock
         for p, m, _ in stream:
@@ -125,6 +128,7 @@ def bench_continuous(base_cfg, params, stream, *, tp=1, prefill_chunk=0,
         "engine": "continuous",
         "tp": tp,
         "prefill_chunk": prefill_chunk,
+        "spec_k": spec_k,
         "wall_s": dt,
         "useful_tokens": useful,
         "tok_per_s": useful / dt,
@@ -132,6 +136,8 @@ def bench_continuous(base_cfg, params, stream, *, tp=1, prefill_chunk=0,
         "p95_step_ms": eng.stats.latency_p95() * 1e3,
         "padding_waste": eng.stats.padding_waste(),
         "steps": eng.stats.steps,
+        "acceptance_rate": eng.stats.acceptance_rate(),
+        "tokens_per_verify_step": eng.stats.tokens_per_verify_step(),
         "tokens": [done[r.rid] for r in reqs],
     }
 
@@ -146,6 +152,10 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=16,
                     help="chunked-prefill width for the chunked rows "
                          "(a multiple of the bench block size, 8)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative-decoding depth for the spec rows "
+                         "(0 = skip them); spec rows join the cross-config "
+                         "token-identity assertion")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write results (tokens/s, p95 step latency, "
                          "padding-waste %%) as JSON, e.g. BENCH_serving.json")
@@ -183,35 +193,47 @@ def main():
           f"{sorted(len(p) for p, _, _ in stream)}")
     params = Engine(base_cfg, key=jax.random.PRNGKey(0)).params
 
-    matrix = [(1, 0), (1, args.prefill_chunk)]
+    matrix = [(1, 0, 0), (1, args.prefill_chunk, 0)]
+    if args.spec_k:
+        matrix += [(1, 0, args.spec_k), (1, args.prefill_chunk, args.spec_k)]
     if args.tp > 1:
         if len(jax.devices()) >= args.tp:
-            matrix += [(args.tp, 0), (args.tp, args.prefill_chunk)]
+            matrix += [(args.tp, 0, 0), (args.tp, args.prefill_chunk, 0)]
+            if args.spec_k:
+                matrix += [(args.tp, 0, args.spec_k),
+                           (args.tp, args.prefill_chunk, args.spec_k)]
         else:
             print(f"[skip] tp={args.tp}: only {len(jax.devices())} device(s); "
                   f"rerun with --force-host-devices {max(8, args.tp)}")
 
     rows = [bench_static(base_cfg, params, stream)]
-    for tp, chunk in matrix:
+    for tp, chunk, spec_k in matrix:
         rows.append(bench_continuous(base_cfg, params, stream,
-                                     tp=tp, prefill_chunk=chunk))
+                                     tp=tp, prefill_chunk=chunk,
+                                     spec_k=spec_k))
 
     # greedy decode must be configuration-invariant: every continuous
-    # config generates the same per-request tokens (CI fails here first)
+    # config — including the speculative ones — generates the same
+    # per-request tokens (CI fails here first)
     token_sets = [r.pop("tokens") for r in rows if r["engine"] == "continuous"]
     token_identical = all(t == token_sets[0] for t in token_sets[1:])
     assert token_identical, (
         "continuous engine configurations diverged under greedy decode "
-        "(tp/chunked must be token-identical to tp=1 unchunked)")
+        "(tp/chunked/spec must be token-identical to tp=1 unchunked)")
 
-    hdr = (f"{'engine':<12}{'tp':>3}{'chunk':>6}{'tok/s':>10}{'wall_s':>9}"
-           f"{'p50_ms':>8}{'p95_ms':>8}{'pad_waste':>11}")
+    hdr = (f"{'engine':<12}{'tp':>3}{'chunk':>6}{'spec':>5}{'tok/s':>10}"
+           f"{'wall_s':>9}{'p50_ms':>8}{'p95_ms':>8}{'pad_waste':>11}"
+           f"{'accept':>8}{'tok/vfy':>8}")
     print("\n" + hdr)
     for r in rows:
+        spec_k = r.get("spec_k", 0)
+        accept = f"{r['acceptance_rate']:>8.1%}" if spec_k else f"{'-':>8}"
+        tpv = (f"{r['tokens_per_verify_step']:>8.2f}" if spec_k
+               else f"{'-':>8}")
         print(f"{r['engine']:<12}{r['tp']:>3}{r['prefill_chunk']:>6}"
-              f"{r['tok_per_s']:>10.1f}{r['wall_s']:>9.3f}"
+              f"{spec_k:>5}{r['tok_per_s']:>10.1f}{r['wall_s']:>9.3f}"
               f"{r['p50_step_ms']:>8.2f}{r['p95_step_ms']:>8.2f}"
-              f"{r['padding_waste']:>11.1%}")
+              f"{r['padding_waste']:>11.1%}{accept}{tpv}")
     s, c = rows[0], rows[1]
     print(f"\npadding waste: static {s['padding_waste']:.1%} -> "
           f"continuous {c['padding_waste']:.1%}; token_identical across "

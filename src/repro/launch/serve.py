@@ -52,6 +52,14 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="chunked prefill width (0 = whole-prompt; "
                          "must be a multiple of the block size, 8)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft k tokens per slot per "
+                         "step and verify k+1 positions in one batched call "
+                         "(0 = off; requires greedy sampling)")
+    ap.add_argument("--spec-draft", default="ngram",
+                    help="drafter: 'ngram'/'ngram:N' (self-speculative "
+                         "context lookup) or 'model:<arch>' (registry draft "
+                         "model sharing the tokenizer)")
     ap.add_argument("--force-host-devices", type=int, default=0,
                     help="force N host (CPU) devices via XLA_FLAGS — must be "
                          "set before jax initializes, so it only works as a "
@@ -106,23 +114,28 @@ def main():
                 max_slots=args.batch, max_seq_len=max_seq + 8,
                 temperature=args.temperature, seed=args.seed,
                 tp=args.tp, prefill_chunk=args.prefill_chunk,
-                prequantize=args.prequantized))
+                prequantize=args.prequantized,
+                spec_k=args.spec_k, spec_draft=args.spec_draft))
         reqs = [eng.submit(
             rng.integers(0, cfg.vocab, args.prompt_len).tolist(),
             max_new_tokens=args.new_tokens, arrival_step=i)
             for i in range(args.batch)]
         done = eng.run()
+        spec = (f" spec_k={args.spec_k} "
+                f"accept={eng.stats.acceptance_rate():.1%} "
+                f"tok/verify={eng.stats.tokens_per_verify_step():.2f}"
+                if args.spec_k else "")
         print(f"arch={cfg.name} numerics={numerics_label!r} engine=continuous "
               f"tp={args.tp} prefill_chunk={args.prefill_chunk} "
               f"steps={eng.stats.steps} pad_waste={eng.stats.padding_waste():.1%} "
               f"step_p50={eng.stats.latency_p50() * 1e3:.1f}ms "
-              f"step_p95={eng.stats.latency_p95() * 1e3:.1f}ms")
+              f"step_p95={eng.stats.latency_p95() * 1e3:.1f}ms" + spec)
         for i, r in enumerate(reqs):
             print(f"req[{i}]: {done[r.rid]}")
         return
 
-    if args.tp > 1 or args.prefill_chunk:
-        raise SystemExit("--tp / --prefill-chunk require --continuous")
+    if args.tp > 1 or args.prefill_chunk or args.spec_k:
+        raise SystemExit("--tp / --prefill-chunk / --spec-k require --continuous")
     eng = Engine(cfg, key=jax.random.PRNGKey(args.seed), prequantize=args.prequantized)
     prompts = {"tokens": jnp.asarray(
         rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32))}

@@ -132,14 +132,30 @@ def attn_apply(
     k = apply_rope(k, positions, rope_theta, mrope_sections)
 
     if kv_cache is not None:
-        # decode / chunked prefill: write at cache_len, attend over prefix
+        # decode / chunked prefill / speculative verify: write the span
+        # at cache_len, attend causally over the cache prefix.
+        # cache_len is a scalar (one shared offset: legacy decode,
+        # single-request chunked prefill) or a [B] vector (paged
+        # multi-token scoring — every slot sits at its own offset).
         ck, cv = kv_cache
-        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_len, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_len, 0, 0))
-        s_k = ck.shape[1]
-        ki = jnp.arange(s_k)[None, :]
-        qi = cache_len + jnp.arange(s)[:, None]
-        m = ki <= qi  # causal over the cache prefix
+        if jnp.ndim(cache_len) == 0:
+            ck = jax.lax.dynamic_update_slice(
+                ck, k.astype(ck.dtype), (0, cache_len, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cv, v.astype(cv.dtype), (0, cache_len, 0, 0))
+            s_k = ck.shape[1]
+            ki = jnp.arange(s_k)[None, :]
+            qi = cache_len + jnp.arange(s)[:, None]
+            m = ki <= qi  # causal over the cache prefix
+        else:
+            upd = jax.vmap(
+                lambda c, u, o: jax.lax.dynamic_update_slice(c, u, (o, 0, 0)))
+            ck = upd(ck, k.astype(ck.dtype), cache_len)
+            cv = upd(cv, v.astype(cv.dtype), cache_len)
+            s_k = ck.shape[1]
+            ki = jnp.arange(s_k)[None, None, :]
+            qi = cache_len[:, None] + jnp.arange(s)[None, :]  # [B, Sq]
+            m = (ki <= qi[:, :, None])[:, None]  # [B, 1, Sq, Sk]
         out = attn_core(q, ck, cv, m, softcap)
         new_kv = (ck, cv)
     else:

@@ -84,20 +84,27 @@ def apply_rope(x, positions, theta: float, sections=None):
     return out.astype(x.dtype)
 
 
-def decode_positions(lengths, mrope: bool = False):
-    """Per-sequence single-token decode positions from cache lengths.
+def multi_token_positions(lengths, width: int, mrope: bool = False):
+    """Per-sequence positions for a `width`-token span starting at each
+    sequence's cache length.
 
-    lengths: [B] int32 — tokens already in each sequence's cache; the
-    incoming token sits at exactly that position.  Returns [B, 1] (or
-    [3, B, 1] broadcast for text-only M-RoPE).  This is the batched
+    lengths: [B] int32 — tokens already in each sequence's cache; token
+    j of the span sits at position ``lengths[b] + j``.  Returns [B, W]
+    (or [3, B, W] broadcast for text-only M-RoPE).  This is the batched
     generalization of `default_positions(..., offset=cache_len)`, which
     assumes one shared scalar offset — continuous batching retires and
-    admits sequences mid-flight, so every slot has its own offset.
+    admits sequences mid-flight, so every slot has its own offset, and
+    speculative verify scores k+1 positions per slot in one call.
     """
-    pos = lengths.astype(jnp.int32)[:, None]
+    pos = lengths.astype(jnp.int32)[:, None] + jnp.arange(width, dtype=jnp.int32)
     if mrope:
         pos = jnp.broadcast_to(pos[None], (3,) + pos.shape)
     return pos
+
+
+def decode_positions(lengths, mrope: bool = False):
+    """Single-token special case of `multi_token_positions`."""
+    return multi_token_positions(lengths, 1, mrope)
 
 
 def causal_mask(s_q: int, s_k: int, q_offset=0):

@@ -37,6 +37,7 @@ class ModelAPI:
     paged_prefill: Optional[Callable] = None  # (params, tokens, kp, vp, block_ids, true_len)
     paged_prefill_chunk: Optional[Callable] = None  # (params, tokens, kp, vp, block_ids, cache_len, last_idx)
     paged_decode_step: Optional[Callable] = None  # (params, token, kp, vp, tables, lengths)
+    paged_score_tokens: Optional[Callable] = None  # (params, tokens [B,W], kp, vp, tables, lengths)
 
 
 def _patches(cfg: ModelConfig) -> int:
@@ -234,11 +235,17 @@ def build(cfg: ModelConfig) -> ModelAPI:
                 cfg, params, token, k_pool, v_pool, block_tables, lengths,
                 use_kernel=use_kernel)
 
+        def paged_score_tokens(params, tokens, k_pool, v_pool, block_tables,
+                               lengths):
+            return _tf.paged_score_tokens(
+                cfg, params, tokens, k_pool, v_pool, block_tables, lengths)
+
         paged = dict(
             paged_pool_init=paged_pool_init,
             paged_prefill=paged_prefill,
             paged_prefill_chunk=paged_prefill_chunk,
             paged_decode_step=paged_decode_step,
+            paged_score_tokens=paged_score_tokens,
         )
 
     return ModelAPI(

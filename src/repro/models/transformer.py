@@ -31,6 +31,7 @@ from repro.parallel.sharding import constrain
 from .attention import attn_apply, attn_apply_paged, attn_init
 from .common import (
     embed_init,
+    multi_token_positions,
     rmsnorm,
     rmsnorm_init,
     scan_policy_segments,
@@ -309,6 +310,44 @@ def paged_prefill(cfg: ModelConfig, params, tokens, k_pool, v_pool,
     return logits, (k_pool, v_pool)
 
 
+def _paged_gather_forward(cfg: ModelConfig, params, tokens, k_pool, v_pool,
+                          block_tables, lengths):
+    """Shared gather→attend→scatter machinery for every multi-token
+    paged path (chunked prefill, speculative verify).
+
+    tokens: [B, W] token span per slot; block_tables: [B, max_blk] full
+    table rows (scratch-padded, static width so every call shares one
+    compile); lengths: [B] traced int32 tokens already cached per slot
+    — token j of slot b is written at position ``lengths[b] + j``.
+
+    Each slot's blocks are gathered into a contiguous [L,B,S,kv,hd]
+    cache, the span runs through the same dynamic-update + causal-mask
+    attention as single-token decode (`attn_apply` kv_cache path, with
+    per-slot offsets), and the updated cache is scattered back to the
+    pool.  Writes land inside each slot's owned blocks as long as
+    ``lengths[b] + W <= capacity`` — the scheduler's worst-case burst
+    reservation guarantees it for live slots; idle/scratch slots write
+    only the reserved scratch block 0, which no live mask ever admits.
+    Returns (hidden [B, W, d], updated (k_pool, v_pool)).
+    """
+    b, w = tokens.shape
+    nl, _, block_size, n_kv, hd = k_pool.shape
+    nb = block_tables.shape[1]
+    s = nb * block_size
+    flat = block_tables.reshape(-1)
+    ck = k_pool[:, flat].reshape(nl, b, s, n_kv, hd)
+    cv = v_pool[:, flat].reshape(nl, b, s, n_kv, hd)
+    x = embed_tokens(cfg, params, tokens)
+    positions = multi_token_positions(
+        lengths, w, mrope=cfg.mrope_sections is not None)
+    hidden, (ck, cv) = lm_backbone(
+        cfg, params, x, positions, kv_caches=(ck, cv), cache_len=lengths)
+    kv_shape = (nl, b * nb, block_size, n_kv, hd)
+    k_pool = k_pool.at[:, flat].set(ck.reshape(kv_shape))
+    v_pool = v_pool.at[:, flat].set(cv.reshape(kv_shape))
+    return hidden, (k_pool, v_pool)
+
+
 def paged_prefill_chunk(cfg: ModelConfig, params, tokens, k_pool, v_pool,
                         block_ids, cache_len, last_idx):
     """Prefill ONE chunk of one request through the incremental path.
@@ -316,36 +355,44 @@ def paged_prefill_chunk(cfg: ModelConfig, params, tokens, k_pool, v_pool,
     tokens: [1, C] — C is the engine's fixed chunk width (a block-size
     multiple; the ragged final chunk is right-padded to a block
     multiple).  block_ids: [max_blk] the request's full block-table row
-    (scratch-padded, static width so every chunk shares one compile);
-    cache_len: traced int32 prompt tokens already cached; last_idx:
-    traced int32 chunk-local index of the last REAL token (only
-    meaningful on the final chunk, where its logits seed decoding).
+    (scratch-padded); cache_len: traced int32 prompt tokens already
+    cached; last_idx: traced int32 chunk-local index of the last REAL
+    token (only meaningful on the final chunk, where its logits seed
+    decoding).
 
-    The sequence's blocks are gathered into a contiguous [L,1,S,kv,hd]
-    cache, the chunk runs through the same dynamic-update + causal-mask
-    attention as single-token decode (`attn_apply` kv_cache path), and
-    the updated cache is scattered back to the pool.  Padding past the
+    Thin wrapper over `_paged_gather_forward` (B=1): padding past the
     real tokens lands beyond `cache_len + real` where the causal mask
     never reads it before decode overwrites it.  Returns
     (logits [1, 1, V] at last_idx, updated (k_pool, v_pool)).
     """
-    b, c = tokens.shape
-    assert b == 1, "chunked prefill admits one request at a time"
-    nl, _, block_size, n_kv, hd = k_pool.shape
-    nb = block_ids.shape[0]
-    s = nb * block_size
-    ck = k_pool[:, block_ids].reshape(nl, 1, s, n_kv, hd)
-    cv = v_pool[:, block_ids].reshape(nl, 1, s, n_kv, hd)
-    x = embed_tokens(cfg, params, tokens)
-    positions = default_positions(cfg, 1, c, offset=cache_len)
-    hidden, (ck, cv) = lm_backbone(
-        cfg, params, x, positions, kv_caches=(ck, cv), cache_len=cache_len)
-    kv_shape = (nl, nb, block_size, n_kv, hd)
-    k_pool = k_pool.at[:, block_ids].set(ck.reshape(kv_shape))
-    v_pool = v_pool.at[:, block_ids].set(cv.reshape(kv_shape))
+    assert tokens.shape[0] == 1, "chunked prefill admits one request at a time"
+    hidden, pools = _paged_gather_forward(
+        cfg, params, tokens, k_pool, v_pool, block_ids[None, :],
+        jnp.reshape(cache_len, (1,)))
     last = jax.lax.dynamic_slice_in_dim(hidden, last_idx, 1, axis=1)
     logits = lm_logits(cfg, params, last)
-    return logits, (k_pool, v_pool)
+    return logits, pools
+
+
+def paged_score_tokens(cfg: ModelConfig, params, tokens, k_pool, v_pool,
+                       block_tables, lengths):
+    """Score a W-token span per slot in ONE batched call (the
+    speculative-decoding verify step).
+
+    tokens: [B, W] — token 0 is each slot's last sampled-but-uncached
+    token, tokens 1..W-1 the drafted continuation; block_tables:
+    [B, max_blk]; lengths: [B] committed cache length per slot.  Writes
+    K/V for all W tokens at positions lengths..lengths+W-1 (the engine
+    rolls the logical length back over rejected tails afterwards) and
+    returns (logits [B, W, V], updated pools) — logits[:, j] is the
+    target distribution for the token AFTER tokens[:, j], so a greedy
+    acceptance scan over argmax(logits) reproduces sequential decode
+    exactly.
+    """
+    hidden, pools = _paged_gather_forward(
+        cfg, params, tokens, k_pool, v_pool, block_tables, lengths)
+    logits = lm_logits(cfg, params, hidden)
+    return logits, pools
 
 
 def paged_decode_step(cfg: ModelConfig, params, token, k_pool, v_pool,

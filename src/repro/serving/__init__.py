@@ -14,3 +14,9 @@ from .kv_cache import (  # noqa: F401
     padded_prompt_len,
 )
 from .scheduler import Request, RequestState, Scheduler  # noqa: F401
+from .spec import (  # noqa: F401
+    Drafter,
+    DraftModelDrafter,
+    NgramDrafter,
+    make_drafter,
+)

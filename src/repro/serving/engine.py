@@ -23,7 +23,11 @@ control plane never notices the mesh.  ``prefill_chunk`` turns on
 chunked prefill on top of either: long prompts are written in
 fixed-size chunks, one per engine step, interleaved with decode, so a
 long prompt bounds per-step latency instead of stalling every running
-sequence behind one monolithic prefill.
+sequence behind one monolithic prefill.  ``spec_k`` turns on
+speculative decoding: a drafter (``repro.serving.spec``) proposes k
+tokens per slot, the target scores all k+1 positions in one batched
+verify call, accepted prefixes commit and rejected tails roll back —
+greedy-token-identical to plain decode, but up to k+1 tokens per step.
 
 Both engines keep per-step wall-clock latencies in ``ServeStats`` so
 benchmarks read p50/p95 from either engine through the same interface.
@@ -79,6 +83,11 @@ class ServeStats:
     active_slot_steps: int = 0  # slot-steps doing useful decode work
     idle_slot_steps: int = 0  # slot-steps wasted (empty slot, step ran)
     generated_tokens: int = 0
+    # speculative decoding: per-verify-step draft/accept accounting
+    spec_steps: int = 0  # batched verify steps run
+    drafted_tokens: int = 0  # k drafts per active slot per verify step
+    accepted_tokens: int = 0  # drafts the target model agreed with
+    spec_committed_tokens: int = 0  # tokens committed via verify steps
     step_latency_s: List[float] = dataclasses.field(default_factory=list)
 
     def padding_waste(self) -> float:
@@ -105,6 +114,22 @@ class ServeStats:
 
     def latency_p95(self) -> float:
         return self.latency_quantile(0.95)
+
+    def acceptance_rate(self) -> float:
+        """Fraction of drafted tokens the target model accepted."""
+        if not self.drafted_tokens:
+            return 0.0
+        return self.accepted_tokens / self.drafted_tokens
+
+    def tokens_per_verify_step(self) -> float:
+        """Mean committed tokens per verify step per active slot — the
+        speculative speedup over one-token-per-step decode (1.0 = no
+        speedup, k+1 = every draft accepted)."""
+        return (
+            self.spec_committed_tokens / self.active_slot_steps
+            if self.spec_steps and self.active_slot_steps
+            else 0.0
+        )
 
 
 class Engine:
@@ -267,6 +292,17 @@ class PagedServeConfig:
     # construction (core.prequant.quantize_params); plam_sim sites then
     # serve through kernels.ops.plam_dense with int16 weight storage
     prequantize: bool = False
+    # speculative decoding: 0 = off; k > 0 drafts k tokens per active
+    # slot per step and verifies all k+1 positions in one batched call
+    # (requires greedy sampling — acceptance is exact argmax agreement,
+    # so the committed stream is token-identical to spec_k=0).
+    # Admission reserves blocks for the worst-case k-token burst and
+    # rejected tails are rolled back (stale K/V scrubbed at retirement).
+    spec_k: int = 0
+    # drafter: "ngram" / "ngram:N" (self-speculative context lookup),
+    # "model:<arch>" (registry draft model sharing the tokenizer), or a
+    # Drafter instance (repro.serving.spec)
+    spec_draft: object = "ngram"
 
 
 class ContinuousBatchingEngine:
@@ -278,8 +314,12 @@ class ContinuousBatchingEngine:
          prefill when ``prefill_chunk`` is set;
       2. feeds at most ONE prompt chunk (head-of-line) when chunking;
       3. runs ONE jitted batched decode step over all fully-prefilled
-         slots, gathering per-sequence block tables and lengths;
-      4. retires finished sequences, returning blocks to the free list.
+         slots, gathering per-sequence block tables and lengths — or,
+         under ``spec_k``, ONE batched k+1-position verify step that
+         commits each slot's accepted draft prefix plus the target's
+         correction token and rolls back the rejected tail;
+      4. retires finished sequences, returning blocks to the free list
+         (stale never-committed K/V scrubbed first).
 
     Supported families: dense / moe (attention KV caches).  SSM, hybrid
     and enc-dec keep the static :class:`Engine` — their caches are
@@ -317,6 +357,16 @@ class ContinuousBatchingEngine:
             )
         if pcfg.prefill_chunk and self.api.paged_prefill_chunk is None:
             raise ValueError(f"family {cfg.family!r} has no chunked prefill path")
+        if pcfg.spec_k:
+            if pcfg.temperature > 0:
+                raise ValueError(
+                    "speculative decoding requires greedy sampling "
+                    "(temperature=0): acceptance is exact argmax agreement"
+                )
+            if self.api.paged_score_tokens is None:
+                raise ValueError(
+                    f"family {cfg.family!r} has no multi-token scoring path"
+                )
 
         self._mesh = None
         if pcfg.tp > 1:
@@ -341,7 +391,12 @@ class ContinuousBatchingEngine:
             self.params, self.prequant_meta = quantize_params(cfg, self.params)
 
         bs, nb = pcfg.block_size, pcfg.num_blocks
-        self.max_blocks_per_seq = -(-pcfg.max_seq_len // bs)
+        # the block table is wide enough for the worst-case speculative
+        # burst: a verify step may write spec_k positions past the
+        # committed tail before acceptance is known, and those writes
+        # must land in the sequence's own (reserved) blocks — never be
+        # clamped back onto committed positions by dynamic_update_slice
+        self.max_blocks_per_seq = -(-(pcfg.max_seq_len + pcfg.spec_k) // bs)
         dtype = jnp.dtype(pcfg.cache_dtype)
         self._k_pool, self._v_pool = self.api.paged_pool_init(nb, bs, dtype)
         if self._mesh is not None:
@@ -352,7 +407,9 @@ class ContinuousBatchingEngine:
             self._k_pool = jax.device_put(self._k_pool, pool_sharding)
             self._v_pool = jax.device_put(self._v_pool, pool_sharding)
         self.allocator = BlockAllocator(nb, bs)
-        self.scheduler = Scheduler(self.allocator, pcfg.max_slots, pcfg.max_seq_len)
+        self.scheduler = Scheduler(
+            self.allocator, pcfg.max_slots, pcfg.max_seq_len, spec_k=pcfg.spec_k
+        )
 
         donate = (2, 3) if jax.default_backend() != "cpu" else ()
         self._prefill = jax.jit(self.api.paged_prefill, donate_argnums=donate)
@@ -364,6 +421,29 @@ class ContinuousBatchingEngine:
         self._decode = jax.jit(
             partial(self.api.paged_decode_step, use_kernel=pcfg.use_kernel),
             donate_argnums=donate,
+        )
+        self.drafter = None
+        self._score = None
+        if pcfg.spec_k:
+            from .spec import make_drafter
+
+            self.drafter = (
+                make_drafter(
+                    pcfg.spec_draft, cfg, key=jax.random.PRNGKey(pcfg.seed)
+                )
+                if isinstance(pcfg.spec_draft, str)
+                else pcfg.spec_draft
+            )
+            self._score = jax.jit(self.api.paged_score_tokens, donate_argnums=donate)
+        # zero freed blocks that still hold written-but-never-committed
+        # K/V (rolled-back draft tails, prefill padding) before the
+        # allocator can hand them to another sequence; the id row is
+        # padded with the scratch block so every scrub shares one
+        # compile (re-zeroing scratch is harmless)
+        scrub_donate = (0, 1) if jax.default_backend() != "cpu" else ()
+        self._scrub_fn = jax.jit(
+            lambda kp, vp, ids: (kp.at[:, ids].set(0), vp.at[:, ids].set(0)),
+            donate_argnums=scrub_donate,
         )
 
         m = pcfg.max_slots
@@ -442,7 +522,10 @@ class ContinuousBatchingEngine:
                     finished.append(req)
 
         if any(r.prefill_done for r in self.scheduler.running.values()):
-            finished.extend(self._do_decode(step))
+            if self.pcfg.spec_k:
+                finished.extend(self._do_verify(step))
+            else:
+                finished.extend(self._do_decode(step))
 
         self.stats.steps += 1
         self._step_no += 1
@@ -477,6 +560,8 @@ class ContinuousBatchingEngine:
                 jnp.int32(plen),
             )
         req.prefill_pos = plen
+        req.verified_len = plen
+        req.drafted_len = s_pad  # pad positions hold junk K/V until overwritten
         tok = int(self._pick_one(logits[0, -1], req, len(req.output)))
         req.output.append(tok)
 
@@ -520,6 +605,8 @@ class ContinuousBatchingEngine:
                 jnp.int32(real - 1),
             )
         req.prefill_pos = start + real
+        req.verified_len = start + real
+        req.drafted_len = max(req.drafted_len, start + width)
         self.stats.prefills += 1
         self.stats.prefill_tokens += real
         self.stats.prefill_padding += width - real
@@ -561,6 +648,8 @@ class ContinuousBatchingEngine:
             tok = int(self._pick_one(logits[slot], req, len(req.output)))
             req.output.append(tok)
             self._lengths[slot] += 1
+            req.verified_len = int(self._lengths[slot])
+            req.drafted_len = max(req.drafted_len, req.verified_len)
             self._last_tok[slot] = tok
             self.stats.generated_tokens += 1
             if req.is_done():
@@ -568,12 +657,99 @@ class ContinuousBatchingEngine:
                 finished.append(req)
         return finished
 
+    def _do_verify(self, step: int) -> List[Request]:
+        """One speculative verify step: draft k tokens per active slot,
+        score all k+1 positions in ONE batched `paged_score_tokens`
+        call, commit the longest agreed prefix plus the target's own
+        correction/bonus token, and roll the logical length back over
+        the rejected tail.
+
+        Greedy acceptance: with targets ``t_i = argmax(logits[:, i])``
+        and drafts ``d_1..d_k``, accept while ``d_{i+1} == t_i`` — the
+        committed tokens ``t_0..t_a`` are exactly what sequential
+        one-token decode would have produced, so spec_k only changes
+        throughput, never the stream.
+        """
+        k = self.pcfg.spec_k
+        w = k + 1
+        m = self.pcfg.max_slots
+        active = [
+            (slot, req)
+            for slot, req in self.scheduler.running.items()
+            if req.prefill_done
+        ]
+        tokens = np.zeros((m, w), np.int32)
+        tokens[:, 0] = self._last_tok
+        drafts: Dict[int, List[int]] = {}
+        for slot, req in active:
+            d = self.drafter.propose(req, k)
+            assert len(d) == k, (len(d), k)
+            drafts[slot] = d
+            tokens[slot, 1:] = d
+        with self._mesh_ctx():
+            logits, (self._k_pool, self._v_pool) = self._score(
+                self.params,
+                jnp.asarray(tokens),
+                self._k_pool,
+                self._v_pool,
+                jnp.asarray(self._tables),
+                jnp.asarray(self._lengths),
+            )
+        logits = np.asarray(logits, np.float32)  # [m, w, V]
+
+        finished = []
+        self.stats.decode_steps += 1
+        self.stats.spec_steps += 1
+        self.stats.active_slot_steps += len(active)
+        self.stats.idle_slot_steps += m - len(active)
+        for slot, req in active:
+            base = int(self._lengths[slot])
+            req.drafted_len = max(req.drafted_len, base + w)
+            targets = np.argmax(logits[slot], axis=-1)
+            d = drafts[slot]
+            a = 0
+            while a < k and d[a] == int(targets[a]):
+                a += 1
+            self.stats.drafted_tokens += k
+            self.stats.accepted_tokens += a
+            committed = 0
+            for t in targets[: a + 1]:
+                req.output.append(int(t))
+                committed += 1
+                self.stats.generated_tokens += 1
+                self.stats.spec_committed_tokens += 1
+                if req.is_done():  # stop_token / max_new hit mid-burst
+                    break
+            self._lengths[slot] = base + committed
+            self._last_tok[slot] = req.output[-1]
+            self.scheduler.rollback(req, base + committed)
+            if req.is_done():
+                self._release(req, step)
+                finished.append(req)
+        return finished
+
     def _release(self, req: Request, step: int) -> None:
         slot = req.slot
-        self.scheduler.retire(req, step)
+        stale = self.scheduler.retire(req, step)
+        if stale:
+            self._scrub(stale)
         self._tables[slot] = SCRATCH_BLOCK
         self._lengths[slot] = 0
         self._last_tok[slot] = 0
+
+    def _scrub(self, blocks: List[int]) -> None:
+        """Zero freed blocks that hold written-but-never-committed K/V
+        (rolled-back speculative tails, prefill padding) so a future
+        owner can never attend over a previous sequence's stale keys —
+        the length masks make such reads unreachable today, but the
+        free list is the trust boundary and scrubbed blocks keep it
+        airtight against any future mask/length accounting bug."""
+        ids = np.full((self.max_blocks_per_seq,), SCRATCH_BLOCK, np.int32)
+        ids[: len(blocks)] = blocks
+        with self._mesh_ctx():
+            self._k_pool, self._v_pool = self._scrub_fn(
+                self._k_pool, self._v_pool, jnp.asarray(ids)
+            )
 
     def _pick_one(self, logits_row, req: Request, token_idx: int):
         if self.pcfg.temperature <= 0:

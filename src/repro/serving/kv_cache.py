@@ -86,6 +86,20 @@ class SequenceAllocation:
     def capacity(self) -> int:
         return len(self.blocks) * self.block_size
 
+    def blocks_covering(self, start: int, stop: int) -> List[int]:
+        """Blocks holding logical positions [start, stop) — the
+        truncate/rollback primitive.  Speculative decoding writes k+1
+        positions per verify step and then rolls the logical length
+        back over the rejected tail; the blocks named here still hold
+        that stale (never-committed) K/V and must be scrubbed before
+        they are handed to another sequence."""
+        if stop <= start:
+            return []
+        assert stop <= self.capacity(), (start, stop, self.capacity())
+        lo = start // self.block_size
+        hi = (stop - 1) // self.block_size
+        return self.blocks[lo : hi + 1]
+
 
 def padded_prompt_len(prompt_len: int, block_size: int) -> int:
     """Prompt length right-padded to a whole number of blocks (the

@@ -55,6 +55,15 @@ class Request:
     admitted_step: int = -1
     finished_step: int = -1
     prefill_pos: int = 0  # prompt tokens already written to the KV pool
+    # speculative-decoding length bookkeeping.  verified_len counts the
+    # COMMITTED cache positions (what attention masks trust);
+    # drafted_len is the high-water mark of positions ever written —
+    # prefill padding and rejected draft tails push it past
+    # verified_len, and that [verified_len, drafted_len) range is the
+    # stale K/V scrubbed at retirement.  Invariant at every step:
+    # verified_len <= drafted_len <= alloc.capacity().
+    verified_len: int = 0
+    drafted_len: int = 0
 
     @property
     def prompt_len(self) -> int:
@@ -76,12 +85,26 @@ class Request:
 
 
 class Scheduler:
-    """FCFS admission over a fixed slot count and a shared block pool."""
+    """FCFS admission over a fixed slot count and a shared block pool.
 
-    def __init__(self, allocator: BlockAllocator, max_slots: int, max_seq_len: int):
+    spec_k > 0 turns on worst-case burst reservation for speculative
+    decoding: every verify step may write k+1 positions beyond the
+    committed length before acceptance is known, so admission reserves
+    room for the deepest possible burst — the write must never escape
+    the sequence's own blocks even when every draft is rejected.
+    """
+
+    def __init__(
+        self,
+        allocator: BlockAllocator,
+        max_slots: int,
+        max_seq_len: int,
+        spec_k: int = 0,
+    ):
         self.allocator = allocator
         self.max_slots = max_slots
         self.max_seq_len = max_seq_len
+        self.spec_k = spec_k
         self.waiting: deque[Request] = deque()
         self.running: Dict[int, Request] = {}  # slot -> request
         self._free_slots = list(range(max_slots - 1, -1, -1))
@@ -109,10 +132,23 @@ class Scheduler:
     def blocks_needed(self, req: Request) -> int:
         """Whole-lifetime reservation: padded prompt blocks plus room
         for every decoded token's KV (the last sampled token is never
-        written back, hence the -1)."""
+        written back, hence the -1).
+
+        Burst math under spec_k: the deepest verify starts at committed
+        length prompt + max_new - 2 (one more commit would finish the
+        request) and writes k+1 positions, so the top written position
+        is prompt + max_new - 2 + spec_k — reserve
+        prompt + max_new - 1 + spec_k positions.  A max_new == 1
+        request finishes at prefill and never verifies, so it carries
+        no burst headroom."""
         bs = self.allocator.block_size
         prompt_pad = padded_prompt_len(req.prompt_len, bs)
         total_positions = max(prompt_pad, req.prompt_len + req.max_new_tokens - 1)
+        if self.spec_k and req.max_new_tokens > 1:
+            total_positions = max(
+                total_positions,
+                req.prompt_len + req.max_new_tokens - 1 + self.spec_k,
+            )
         return self.allocator.blocks_for(total_positions)
 
     # -- per-step scheduling ----------------------------------------------
@@ -140,15 +176,44 @@ class Scheduler:
             admitted.append(req)
         return admitted
 
-    def retire(self, req: Request, step: int) -> None:
+    def rollback(self, req: Request, committed_len: int) -> None:
+        """Roll a sequence's logical length back after a verify step.
+
+        The verify wrote K/V up to req.drafted_len; only
+        ``committed_len`` positions were accepted.  The rejected tail's
+        blocks stay owned — the next verify re-writes from
+        committed_len, so within the sequence stale entries are always
+        overwritten before the committed length reaches them — but the
+        truncation must be recorded so retirement knows what to scrub.
+        """
+        assert req.state is RequestState.RUNNING
+        assert req.verified_len <= committed_len <= req.drafted_len, (
+            req.verified_len,
+            committed_len,
+            req.drafted_len,
+        )
+        assert req.drafted_len <= req.alloc.capacity(), (
+            req.drafted_len,
+            req.alloc.capacity(),
+        )
+        req.verified_len = committed_len
+
+    def retire(self, req: Request, step: int) -> List[int]:
+        """Retire a finished request, returning its blocks to the free
+        list.  Returns the block ids still holding stale
+        (written-but-never-committed) K/V — draft tails rolled back by
+        `rollback`, prefill padding — which the engine must scrub
+        before the allocator hands them to another sequence."""
         assert req.state is RequestState.RUNNING
         req.state = RequestState.FINISHED
         req.finished_step = step
+        stale = req.alloc.blocks_covering(req.verified_len, req.drafted_len)
         self.allocator.free(req.alloc.blocks)
         req.alloc = None
         del self.running[req.slot]
         self._free_slots.append(req.slot)
         req.slot = -1
+        return stale
 
     def has_work(self) -> bool:
         return bool(self.running) or bool(self.waiting)

@@ -1,0 +1,173 @@
+"""Drafters for speculative decoding.
+
+A drafter proposes ``k`` continuation tokens for a running request; the
+engine then scores all ``k + 1`` positions (the last committed token
+plus the drafts) in ONE batched verify step
+(`repro.models.transformer.paged_score_tokens`) and commits the longest
+prefix the target model agrees with, plus the target's own
+correction/bonus token.  Under greedy sampling the committed stream is
+provably identical to plain one-token-per-step decode — a drafter can
+only change HOW FAST tokens come out, never WHICH tokens.
+
+Two built-in drafters:
+
+* :class:`NgramDrafter` — self-speculative prompt/n-gram lookup: match
+  the longest recent suffix of the committed context (prompt + output)
+  against an earlier occurrence and propose the tokens that followed
+  it.  Needs no extra model; shines on repetitive text (code, structured
+  output, greedy repetition loops) and degrades gracefully to ~zero
+  acceptance on incompressible context.
+* :class:`DraftModelDrafter` — a small draft model sharing the target's
+  tokenizer (same vocab), built through the model registry and run
+  greedily through the static :class:`~repro.serving.engine.Engine` for
+  ``k`` tokens per proposal.
+
+``make_drafter`` resolves the ``PagedServeConfig.spec_draft`` string:
+``"ngram"`` / ``"ngram:N"`` (max n-gram width N), or ``"model:<arch>"``
+for a registry architecture serving as the draft model.
+"""
+from __future__ import annotations
+
+from typing import List, Protocol, runtime_checkable
+
+from repro.configs.base import ModelConfig
+
+from .scheduler import Request
+
+
+@runtime_checkable
+class Drafter(Protocol):
+    """Anything with ``propose(request, k) -> k token ids``."""
+
+    def propose(self, req: Request, k: int) -> List[int]:
+        """Return EXACTLY k drafted continuation tokens for ``req``
+        given its committed context (prompt + output).  Drafts need not
+        be good — wrong tokens are rejected by the verify step — but
+        the length contract keeps the verify batch shape static."""
+        ...  # pragma: no cover
+
+
+def _pad_drafts(drafts: List[int], k: int, fallback: int) -> List[int]:
+    """Right-pad a (possibly short) draft list to exactly k tokens."""
+    out = list(drafts[:k])
+    while len(out) < k:
+        out.append(out[-1] if out else fallback)
+    return out
+
+
+class NgramDrafter:
+    """Self-speculative n-gram lookup over the request's own context.
+
+    For n from ``max_n`` down to ``min_n``: take the last n committed
+    tokens as the probe, find its most recent earlier occurrence in the
+    context, and propose the k tokens that followed that occurrence.
+    Falls back to repeating the last token when nothing matches —
+    near-free to verify and occasionally right in a repetition loop.
+    """
+
+    def __init__(self, max_n: int = 3, min_n: int = 1):
+        assert 1 <= min_n <= max_n, (min_n, max_n)
+        self.max_n = max_n
+        self.min_n = min_n
+
+    def propose(self, req: Request, k: int) -> List[int]:
+        ctx = req.prompt + req.output
+        fallback = ctx[-1] if ctx else 0
+        for n in range(self.max_n, self.min_n - 1, -1):
+            if len(ctx) <= n:
+                continue
+            probe = ctx[len(ctx) - n :]
+            # most recent earlier occurrence wins: recent context is the
+            # best predictor of what comes next
+            for start in range(len(ctx) - n - 1, -1, -1):
+                if ctx[start : start + n] == probe:
+                    cont = ctx[start + n : start + n + k]
+                    if cont:
+                        return _pad_drafts(cont, k, fallback)
+        return [fallback] * k
+
+
+class DraftModelDrafter:
+    """Draft with a small model sharing the target's tokenizer.
+
+    The draft model is any registry-built family with a prefill/decode
+    path; each proposal greedily decodes k tokens through the static
+    Engine, conditioned on a power-of-two suffix **window** of the
+    committed context (at most ``window`` tokens).  The window is what
+    bounds XLA compiles: the raw context grows every verify step, and
+    jitting a fresh prefill per length would cost a compile per engine
+    step — a suffix drawn from a fixed shape menu {1, 2, 4, ...,
+    window} compiles each shape once.  Drafts are a heuristic, so
+    trading distant context for bounded compiles is the right side of
+    the bargain (wrong drafts only waste verify positions).
+
+    The draft model's weights are its own (``params``/``key``) — only
+    the token space is shared, which is why construction enforces vocab
+    equality.  Trained draft weights are supplied via ``params`` (the
+    string ``"model:<arch>"`` path builds a reduced random-init model —
+    a wiring demo, not a speedup).
+    """
+
+    def __init__(
+        self,
+        draft_cfg: ModelConfig,
+        target_cfg: ModelConfig,
+        params=None,
+        key=None,
+        window: int = 32,
+    ):
+        if draft_cfg.vocab != target_cfg.vocab:
+            raise ValueError(
+                f"draft model vocab {draft_cfg.vocab} != target vocab "
+                f"{target_cfg.vocab}; speculative decoding requires a "
+                "shared tokenizer"
+            )
+        assert window >= 1
+        from .engine import Engine, ServeConfig  # lazy: engine imports spec
+
+        self.window = window
+        self._engine = Engine(draft_cfg, params=params, key=key)
+        self._scfg_cls = ServeConfig
+
+    def propose(self, req: Request, k: int) -> List[int]:
+        import numpy as np
+        import jax.numpy as jnp
+
+        ctx = req.prompt + req.output
+        w = 1
+        while w * 2 <= min(len(ctx), self.window):
+            w *= 2
+        tail = ctx[len(ctx) - w :]
+        tokens = jnp.asarray(np.asarray(tail, np.int32)[None])
+        out = self._engine.generate(
+            {"tokens": tokens}, self._scfg_cls(max_new_tokens=k)
+        )
+        return _pad_drafts(np.asarray(out)[0].tolist(), k, ctx[-1])
+
+
+def make_drafter(spec: str, target_cfg: ModelConfig, key=None) -> Drafter:
+    """Resolve a ``spec_draft`` string to a drafter instance.
+
+    ``"ngram"`` / ``"ngram:N"``: self-speculative lookup (max width N,
+    default 3).  ``"model:<arch>"``: the registry architecture ``arch``
+    (reduced, f32) as a draft model — it must share the target's vocab.
+    """
+    if spec == "ngram" or spec.startswith("ngram:"):
+        max_n = int(spec.split(":", 1)[1]) if ":" in spec else 3
+        return NgramDrafter(max_n=max_n)
+    if spec.startswith("model:"):
+        import dataclasses
+
+        from repro.configs import ARCHS, get_config
+
+        arch = spec.split(":", 1)[1]
+        if arch not in ARCHS:
+            raise ValueError(f"unknown draft arch {arch!r}; pick from {sorted(ARCHS)}")
+        draft_cfg = get_config(arch).reduced()
+        draft_cfg = dataclasses.replace(
+            draft_cfg, param_dtype="float32", act_dtype="float32"
+        )
+        return DraftModelDrafter(draft_cfg, target_cfg, key=key)
+    raise ValueError(
+        f"unknown drafter spec {spec!r}; use 'ngram', 'ngram:N' or 'model:<arch>'"
+    )

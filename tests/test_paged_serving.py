@@ -362,6 +362,68 @@ def test_block_reuse_after_retirement_no_aliasing(params):
     assert cbe.allocator.num_free == 4
 
 
+def test_spec_stale_blocks_scrubbed_before_reuse(params):
+    """Regression (previously failed): a speculative verify step writes
+    k+1 positions, the rejected tail is rolled back, and the sequence
+    retires — the rolled-back (and prefill-padding) K/V used to survive
+    in the freed blocks, so the free list handed a future sequence
+    blocks still holding a previous owner's stale keys.  The engine now
+    scrubs the never-committed [verified_len, drafted_len) range at
+    retirement: what the free list hands out is zero."""
+    rng = np.random.default_rng(13)
+    cbe = ContinuousBatchingEngine(
+        CFG, params=params,
+        pcfg=PagedServeConfig(block_size=4, num_blocks=8, max_slots=1,
+                              max_seq_len=24, spec_k=4))
+    req = cbe.submit(rng.integers(0, 97, 5).tolist(), max_new_tokens=6)
+    cbe.run()
+    assert cbe.allocator.num_free == 7
+    # the run really did roll back writes (drafted past committed)
+    assert req.drafted_len > req.verified_len
+    # single request on a fresh engine: blocks were handed out in free
+    # list order, so its allocation was the contiguous prefix [1, 2, ..]
+    from repro.serving import SequenceAllocation
+
+    alloc = SequenceAllocation(list(range(1, 8)), 4)
+    stale = alloc.blocks_covering(req.verified_len, req.drafted_len)
+    assert stale, "burst should have written past the committed tail"
+    kp = np.asarray(cbe._k_pool)
+    vp = np.asarray(cbe._v_pool)
+    assert float(np.abs(kp[:, stale]).sum()) == 0.0, (
+        "freed blocks still hold rolled-back (never-committed) keys")
+    assert float(np.abs(vp[:, stale]).sum()) == 0.0
+    # sanity that the assertion has teeth: committed-range blocks WERE
+    # written (they hold the sequence's real K/V until reuse)
+    committed = [b for b in alloc.blocks_covering(0, req.verified_len)
+                 if b not in stale]
+    assert float(np.abs(kp[:, committed]).sum()) > 0.0
+
+
+def test_spec_block_reuse_after_retirement_no_aliasing(params):
+    """Block reuse under speculative decoding: a sequence that inherits
+    blocks a speculating predecessor dirtied (rolled-back draft tails)
+    generates exactly the tokens it generates on a fresh engine."""
+    rng = np.random.default_rng(17)
+    p1 = rng.integers(0, 97, 8).tolist()
+    p2 = rng.integers(0, 97, 6).tolist()
+
+    def pcfg():
+        return PagedServeConfig(block_size=4, num_blocks=5, max_slots=2,
+                                max_seq_len=16, spec_k=4)
+
+    fresh = ContinuousBatchingEngine(CFG, params=params, pcfg=pcfg())
+    ref = fresh.submit(p2, max_new_tokens=4)
+    expect = fresh.run()[ref.rid]
+
+    cbe = ContinuousBatchingEngine(CFG, params=params, pcfg=pcfg())
+    r1 = cbe.submit(p1, max_new_tokens=4)
+    r2 = cbe.submit(p2, max_new_tokens=4)
+    done = cbe.run()
+    assert r2.admitted_step > r1.finished_step  # really did wait + reuse
+    assert done[r2.rid] == expect
+    assert cbe.allocator.num_free == 4
+
+
 def test_moe_family_paged(params):
     del params
     cfg = ModelConfig(

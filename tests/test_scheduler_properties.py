@@ -1,0 +1,149 @@
+"""Property tests: scheduler / allocator invariants under random load.
+
+Shim-compatible (tests/_hypothesis_shim.py): drives randomized request
+streams — staggered arrivals, random prompt/output lengths, random
+early finishes, speculative bursts with random acceptance — through
+the REAL Scheduler + BlockAllocator (no model, no device work) and
+asserts the structural invariants every engine build relies on:
+
+* no block is owned by two live sequences (no double allocation);
+* block 0 (scratch) is never handed out;
+* free-list cardinality + owned blocks == pool size at every step, and
+  the free list is fully restored once all requests retire (no leaks);
+* ``verified_len <= drafted_len <= reserved capacity`` at every step —
+  the speculative write burst can never escape a sequence's own blocks.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.serving import (
+    BlockAllocator,
+    Request,
+    Scheduler,
+    SequenceAllocation,
+    SCRATCH_BLOCK,
+    padded_prompt_len,
+)
+
+
+def _check_invariants(sched: Scheduler, al: BlockAllocator) -> None:
+    owned = [b for r in sched.running.values() for b in r.alloc.blocks]
+    assert len(owned) == len(set(owned)), "block double-allocated"
+    assert SCRATCH_BLOCK not in owned, "scratch block handed out"
+    assert al.num_free + len(owned) == al.num_blocks - 1, "block leak"
+    for r in sched.running.values():
+        assert r.verified_len <= r.drafted_len <= r.alloc.capacity(), (
+            r.rid, r.verified_len, r.drafted_len, r.alloc.capacity())
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=10_000),
+    st.integers(min_value=2, max_value=5),
+    st.integers(min_value=1, max_value=4),
+    st.integers(min_value=0, max_value=4),
+)
+def test_random_stream_preserves_invariants(seed, block_size, max_slots, spec_k):
+    rng = np.random.default_rng(seed + 1)
+    num_blocks = int(rng.integers(6, 40))
+    max_seq_len = int(rng.integers(8, 64))
+    al = BlockAllocator(num_blocks, block_size)
+    sched = Scheduler(al, max_slots, max_seq_len, spec_k=spec_k)
+
+    arrival = 0
+    for rid in range(int(rng.integers(1, 12))):
+        plen = int(rng.integers(1, max_seq_len))
+        max_new = int(rng.integers(1, max_seq_len - plen + 1))
+        req = Request(rid=rid, prompt=[0] * plen, max_new_tokens=max_new,
+                      arrival_step=arrival)
+        arrival += int(rng.integers(0, 3))
+        try:
+            sched.submit(req)
+        except ValueError:
+            continue  # could never fit the pool: rejected at submit
+
+    step = 0
+    while sched.has_work():
+        for req in sched.admit(step):
+            # simulate prefill: the whole (block-padded) prompt written
+            req.verified_len = req.prompt_len
+            req.drafted_len = padded_prompt_len(req.prompt_len, block_size)
+            req.output.append(0)
+            _check_invariants(sched, al)
+        for req in list(sched.running.values()):
+            if req.output and rng.random() < 0.15:
+                sched.retire(req, step)  # random early finish (stop token)
+                _check_invariants(sched, al)
+                continue
+            remaining = req.max_new_tokens - len(req.output)
+            if remaining <= 0:
+                sched.retire(req, step)
+                _check_invariants(sched, al)
+                continue
+            if spec_k and remaining > 0:
+                # speculative burst: k+1 positions written, then the
+                # logical length rolled back to a random commit point
+                base = req.verified_len
+                req.drafted_len = max(req.drafted_len, base + spec_k + 1)
+                commit = min(int(rng.integers(1, spec_k + 2)), remaining)
+                sched.rollback(req, base + commit)
+                req.output.extend([0] * commit)
+            else:
+                req.verified_len += 1
+                req.drafted_len = max(req.drafted_len, req.verified_len)
+                req.output.append(0)
+            _check_invariants(sched, al)
+        step += 1
+        assert step < 10_000, "stream did not drain"
+
+    assert al.num_free == al.num_blocks - 1, "free list not restored"
+    assert not sched.running and not sched.waiting
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=8),
+    st.integers(min_value=1, max_value=6),
+    st.integers(min_value=0, max_value=47),
+    st.integers(min_value=0, max_value=48),
+)
+def test_blocks_covering_matches_bruteforce(n_blocks, block_size, start, stop):
+    """blocks_covering([start, stop)) is exactly the set of blocks a
+    position-by-position walk touches."""
+    alloc = SequenceAllocation(list(range(1, n_blocks + 1)), block_size)
+    cap = alloc.capacity()
+    start = min(start, cap)
+    stop = min(stop, cap)
+    got = alloc.blocks_covering(start, stop)
+    brute = []
+    for pos in range(start, stop):
+        b = alloc.blocks[pos // block_size]
+        if b not in brute:
+            brute.append(b)
+    assert got == brute, (start, stop, block_size, got, brute)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000), st.integers(min_value=1, max_value=4))
+def test_retire_reports_exactly_the_stale_blocks(seed, spec_k):
+    """What retire() hands back for scrubbing is precisely the blocks
+    covering [verified_len, drafted_len) — no more (committed-only
+    blocks are reusable as-is under the length masks), no fewer (every
+    block holding never-committed K/V is scrubbed)."""
+    rng = np.random.default_rng(seed)
+    bs = int(rng.integers(2, 6))
+    al = BlockAllocator(64, bs)
+    sched = Scheduler(al, 2, 64, spec_k=spec_k)
+    plen = int(rng.integers(1, 20))
+    max_new = int(rng.integers(2, 20))
+    req = Request(rid=0, prompt=[0] * plen, max_new_tokens=max_new)
+    sched.submit(req)
+    sched.admit(step=0)
+    req.verified_len = plen
+    req.drafted_len = padded_prompt_len(plen, bs)
+    burst = int(rng.integers(0, spec_k + 2))
+    req.drafted_len = max(req.drafted_len, req.verified_len + burst)
+    assert req.drafted_len <= req.alloc.capacity()
+    expect = req.alloc.blocks_covering(req.verified_len, req.drafted_len)
+    assert sched.retire(req, step=1) == expect
+    assert al.num_free == al.num_blocks - 1
