@@ -17,6 +17,11 @@ chunked prefill, plus speculative-decoding rows (``--spec-k``, with
 acceptance rate and committed tokens per verify step), and asserts
 every configuration generates EXACTLY the same tokens — the greedy
 token-identity bar that CI's bench-smoke job re-checks on every push.
+A separate OVERLOAD scenario (arrival rate > pool capacity) compares
+preemption off vs "recompute": short-request p95 completion latency in
+engine steps, eviction/resume counts, resume latency and the
+deterministic deadline-miss rate — asserting that preemption never
+changes a completed request's tokens.
 The bench model serves in plam_sim numerics (the paper's approximate
 multiplier), whose per-matmul quantization also keeps greedy argmax
 invariant to TP reduction-order float noise.
@@ -57,6 +62,80 @@ def make_stream(n_requests: int, seed: int = 0):
         stream.append((rng.integers(0, 256, plen).tolist(), max_new, step))
         step += int(rng.integers(0, 3))  # 0-2 engine steps between arrivals
     return stream
+
+
+def make_overload_stream(seed: int = 0):
+    """Arrival rate > capacity: long low-priority requests saturating
+    the pool with short high-priority requests arriving behind them.
+    Prompt lengths are drawn from two fixed buckets (32 and 8) so the
+    overload rows stay to a handful of prefill compiles.  Returns
+    (prompt, max_new, arrival_step, priority, deadline_steps) tuples,
+    arrival-ordered; half the shorts carry a step-count deadline."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    entries = []
+    for i in range(4):  # the saturating background
+        entries.append((rng.integers(0, 256, 32).tolist(), 16, i, 0, None))
+    for j in range(6):  # the latency-sensitive foreground
+        entries.append((rng.integers(0, 256, 8).tolist(), 6, 1 + j, 1,
+                        60.0 if j % 2 else None))
+    return sorted(entries, key=lambda e: e[2])
+
+
+def bench_overload(base_cfg, params, *, preemption, seed=0):
+    """Overload scenario: the pool holds ~2 of the 4 concurrent long
+    requests, so the shorts must either queue behind them (FCFS,
+    preemption="off") or evict them (priority victims under
+    "recompute").  The metric that separates the regimes is the SHORT
+    requests' completion latency in engine steps — wall-clock would
+    mostly measure CPU compile noise.  Deadlines tick on an injected
+    step-counting clock, so the miss rate is deterministic too."""
+    import numpy as np
+
+    from repro.serving import ContinuousBatchingEngine, PagedServeConfig
+
+    stream = make_overload_stream(seed)
+    box = {}
+    pcfg = PagedServeConfig(
+        block_size=8, num_blocks=16, max_slots=4, max_seq_len=64,
+        preemption=preemption,
+        clock=lambda: float(box["eng"].current_step) if box else 0.0)
+    eng = ContinuousBatchingEngine(base_cfg, params=params, pcfg=pcfg)
+    box["eng"] = eng
+    reqs = []
+    for p, m, s, prio, dl in stream:
+        reqs.append(eng.submit(p, max_new_tokens=m, arrival_step=s,
+                               priority=prio, deadline_s=dl))
+    t0 = time.perf_counter()
+    eng.run()
+    dt = time.perf_counter() - t0
+
+    from repro.serving import RequestState
+
+    shorts = [r for r, e in zip(reqs, stream) if e[3] > 0]
+    finished_shorts = [r for r in shorts if r.state is RequestState.FINISHED]
+    short_lat = [r.finished_step - r.arrival_step for r in finished_shorts]
+    with_deadline = [r for r in reqs if r.deadline_s is not None]
+    return {
+        "engine": "overload",
+        "preemption": preemption,
+        "wall_s": dt,
+        "steps": eng.stats.steps,
+        "short_p95_latency_steps": (
+            float(np.quantile(np.asarray(short_lat), 0.95))
+            if short_lat else float("nan")),
+        "preemptions": eng.stats.preemptions,
+        "resumes": eng.stats.resumes,
+        "resume_latency_steps_mean": (
+            float(np.mean(eng.stats.resume_latency_steps))
+            if eng.stats.resume_latency_steps else 0.0),
+        "deadline_miss_rate": (
+            eng.stats.deadline_cancelled / len(with_deadline)
+            if with_deadline else 0.0),
+        "tokens": {r.rid: list(r.output) for r in reqs
+                   if r.state is RequestState.FINISHED},
+    }
 
 
 def bench_static(base_cfg, params, stream):
@@ -221,6 +300,22 @@ def main():
         "continuous engine configurations diverged under greedy decode "
         "(tp/chunked/spec must be token-identical to tp=1 unchunked)")
 
+    # overload scenario: arrival rate > pool capacity, preemption off vs
+    # on.  Preemption joins the identity bar: every request that ran to
+    # completion in both regimes emitted the same tokens, evictions and
+    # recompute-resumes included (deadline-cancelled stragglers differ
+    # by construction — a cancelled stream is a shorter stream).
+    overload_rows = [
+        bench_overload(base_cfg, params, preemption="off", seed=args.seed),
+        bench_overload(base_cfg, params, preemption="recompute",
+                       seed=args.seed),
+    ]
+    off_toks, on_toks = [r.pop("tokens") for r in overload_rows]
+    both = sorted(set(off_toks) & set(on_toks))
+    assert both, "overload runs finished no common requests"
+    assert all(off_toks[rid] == on_toks[rid] for rid in both), (
+        "preemption changed a completed request's tokens under overload")
+
     hdr = (f"{'engine':<12}{'tp':>3}{'chunk':>6}{'spec':>5}{'tok/s':>10}"
            f"{'wall_s':>9}{'p50_ms':>8}{'p95_ms':>8}{'pad_waste':>11}"
            f"{'accept':>8}{'tok/vfy':>8}")
@@ -239,6 +334,15 @@ def main():
           f"continuous {c['padding_waste']:.1%}; token_identical across "
           f"{len(token_sets)} continuous configs: {token_identical}")
 
+    print(f"\n{'overload':<12}{'preempt':>10}{'short_p95':>11}{'steps':>7}"
+          f"{'evict':>7}{'resume':>8}{'rsm_lat':>9}{'dl_miss':>9}")
+    for r in overload_rows:
+        print(f"{r['engine']:<12}{r['preemption']:>10}"
+              f"{r['short_p95_latency_steps']:>11.1f}{r['steps']:>7}"
+              f"{r['preemptions']:>7}{r['resumes']:>8}"
+              f"{r['resume_latency_steps_mean']:>9.1f}"
+              f"{r['deadline_miss_rate']:>9.1%}")
+
     if args.json:
         payload = {
             "bench": "serving",
@@ -247,6 +351,7 @@ def main():
             "devices": len(jax.devices()),
             "token_identical": token_identical,
             "rows": rows,
+            "overload": overload_rows,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

@@ -60,6 +60,20 @@ def main():
                     help="drafter: 'ngram'/'ngram:N' (self-speculative "
                          "context lookup) or 'model:<arch>' (registry draft "
                          "model sharing the tokenizer)")
+    ap.add_argument("--preemption", default="off",
+                    choices=["off", "recompute"],
+                    help="preemptive scheduling under KV pressure: "
+                         "'recompute' admits with prompt-sized allocations, "
+                         "grows on demand, evicts the lowest-priority / "
+                         "latest-arrival victim under pressure and resumes "
+                         "it by recomputing its committed tokens")
+    ap.add_argument("--priority", type=int, default=0,
+                    help="priority for the demo requests (larger = more "
+                         "deserving under --preemption recompute)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="wall-clock deadline per request, seconds from "
+                         "submit; expired requests are cancelled with "
+                         "whatever output they committed")
     ap.add_argument("--force-host-devices", type=int, default=0,
                     help="force N host (CPU) devices via XLA_FLAGS — must be "
                          "set before jax initializes, so it only works as a "
@@ -115,16 +129,22 @@ def main():
                 temperature=args.temperature, seed=args.seed,
                 tp=args.tp, prefill_chunk=args.prefill_chunk,
                 prequantize=args.prequantized,
-                spec_k=args.spec_k, spec_draft=args.spec_draft))
+                spec_k=args.spec_k, spec_draft=args.spec_draft,
+                preemption=args.preemption))
         reqs = [eng.submit(
             rng.integers(0, cfg.vocab, args.prompt_len).tolist(),
-            max_new_tokens=args.new_tokens, arrival_step=i)
+            max_new_tokens=args.new_tokens, arrival_step=i,
+            priority=args.priority, deadline_s=args.deadline_s)
             for i in range(args.batch)]
         done = eng.run()
         spec = (f" spec_k={args.spec_k} "
                 f"accept={eng.stats.acceptance_rate():.1%} "
                 f"tok/verify={eng.stats.tokens_per_verify_step():.2f}"
                 if args.spec_k else "")
+        if args.preemption != "off" or args.deadline_s is not None:
+            spec += (f" preemptions={eng.stats.preemptions}"
+                     f" resumes={eng.stats.resumes}"
+                     f" deadline_cancelled={eng.stats.deadline_cancelled}")
         print(f"arch={cfg.name} numerics={numerics_label!r} engine=continuous "
               f"tp={args.tp} prefill_chunk={args.prefill_chunk} "
               f"steps={eng.stats.steps} pad_waste={eng.stats.padding_waste():.1%} "
@@ -134,8 +154,11 @@ def main():
             print(f"req[{i}]: {done[r.rid]}")
         return
 
-    if args.tp > 1 or args.prefill_chunk or args.spec_k:
-        raise SystemExit("--tp / --prefill-chunk / --spec-k require --continuous")
+    if (args.tp > 1 or args.prefill_chunk or args.spec_k
+            or args.preemption != "off" or args.deadline_s is not None
+            or args.priority):
+        raise SystemExit("--tp / --prefill-chunk / --spec-k / --preemption / "
+                         "--deadline-s / --priority require --continuous")
     eng = Engine(cfg, key=jax.random.PRNGKey(args.seed), prequantize=args.prequantized)
     prompts = {"tokens": jnp.asarray(
         rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32))}

@@ -50,7 +50,7 @@ from repro.models import ModelAPI, build
 from repro.parallel.sharding import paged_pool_spec, param_shardings, use_mesh
 
 from .kv_cache import BlockAllocator, SCRATCH_BLOCK, padded_prompt_len
-from .scheduler import Request, Scheduler
+from .scheduler import Request, RequestState, Scheduler
 
 
 @dataclasses.dataclass
@@ -89,6 +89,12 @@ class ServeStats:
     accepted_tokens: int = 0  # drafts the target model agreed with
     spec_committed_tokens: int = 0  # tokens committed via verify steps
     step_latency_s: List[float] = dataclasses.field(default_factory=list)
+    # preemption / deadline accounting (preemption="recompute")
+    preemptions: int = 0  # running sequences evicted under pool pressure
+    resumes: int = 0  # preempted sequences re-admitted (recompute-resume)
+    deadline_cancelled: int = 0  # requests cancelled at deadline expiry
+    resume_latency_s: List[float] = dataclasses.field(default_factory=list)
+    resume_latency_steps: List[int] = dataclasses.field(default_factory=list)
 
     def padding_waste(self) -> float:
         """Fraction of engine capacity spent on padding/idle slots."""
@@ -120,6 +126,13 @@ class ServeStats:
         if not self.drafted_tokens:
             return 0.0
         return self.accepted_tokens / self.drafted_tokens
+
+    def resume_latency_mean_s(self) -> float:
+        """Mean wall seconds a preempted request spent parked before
+        its recompute-resume was admitted."""
+        if not self.resume_latency_s:
+            return 0.0
+        return float(np.mean(np.asarray(self.resume_latency_s)))
 
     def tokens_per_verify_step(self) -> float:
         """Mean committed tokens per verify step per active slot — the
@@ -303,6 +316,20 @@ class PagedServeConfig:
     # "model:<arch>" (registry draft model sharing the tokenizer), or a
     # Drafter instance (repro.serving.spec)
     spec_draft: object = "ngram"
+    # preemptive scheduling under KV pressure.  "off" = PR 1-4
+    # behavior: admission reserves whole-lifetime blocks, FCFS, no
+    # eviction.  "recompute" = admission allocates only the prefill
+    # context, sequences grow on demand, and under pool pressure the
+    # least deserving running request (lowest Request.priority, then
+    # latest arrival) is preempted — all its written blocks scrubbed —
+    # and later resumed by recomputing its committed tokens through the
+    # chunked-prefill path; resumed streams are greedy-token-identical
+    # to uninterrupted runs.
+    preemption: str = "off"
+    # injectable wall clock (monotonic seconds) for deadline expiry and
+    # resume-latency stats; None = time.monotonic.  Tests inject a fake
+    # clock to drive Request.deadline_s deterministically.
+    clock: Optional[object] = None
 
 
 class ContinuousBatchingEngine:
@@ -407,8 +434,14 @@ class ContinuousBatchingEngine:
             self._k_pool = jax.device_put(self._k_pool, pool_sharding)
             self._v_pool = jax.device_put(self._v_pool, pool_sharding)
         self.allocator = BlockAllocator(nb, bs)
+        self._clock = pcfg.clock if pcfg.clock is not None else time.monotonic
         self.scheduler = Scheduler(
-            self.allocator, pcfg.max_slots, pcfg.max_seq_len, spec_k=pcfg.spec_k
+            self.allocator,
+            pcfg.max_slots,
+            pcfg.max_seq_len,
+            spec_k=pcfg.spec_k,
+            preemption=pcfg.preemption,
+            clock=self._clock,
         )
 
         donate = (2, 3) if jax.default_backend() != "cpu" else ()
@@ -474,19 +507,37 @@ class ContinuousBatchingEngine:
         max_new_tokens: int = 16,
         arrival_step: int = 0,
         stop_token: Optional[int] = None,
+        priority: int = 0,
+        deadline_s: Optional[float] = None,
     ) -> Request:
         """Queue a request; returns the Request handle.  Requests must
-        be submitted in non-decreasing arrival_step order (FCFS)."""
+        be submitted in non-decreasing arrival_step order.  ``priority``
+        orders admission and preemption immunity under
+        ``preemption="recompute"`` (larger wins; FCFS ignores it);
+        ``deadline_s`` is a wall-clock budget from now — an expired
+        request is cancelled wherever it is, keeping any output already
+        committed."""
         req = Request(
             rid=self._next_rid,
             prompt=[int(t) for t in prompt],
             max_new_tokens=max_new_tokens,
             arrival_step=arrival_step,
             stop_token=stop_token,
+            priority=priority,
+            deadline_s=deadline_s,
+            submit_time=self._clock(),
         )
         self._next_rid += 1
         self.scheduler.submit(req)
         return req
+
+    def cancel(self, req: Request) -> None:
+        """Client-side abort: cancel ``req`` wherever it is (waiting,
+        running, preempted), keeping its committed output.  No-op for
+        already-finished/cancelled requests."""
+        if req.state in (RequestState.FINISHED, RequestState.CANCELLED):
+            return
+        self._cancel(req, self._step_no)
 
     # -- engine loop -------------------------------------------------------
 
@@ -502,7 +553,21 @@ class ContinuousBatchingEngine:
         step = self._step_no
         finished: List[Request] = []
 
-        for req in self.scheduler.admit(step):
+        # deadline sweep: expired requests are cancelled wherever they
+        # live (waiting / running / preempted), keeping committed output
+        for req in self.scheduler.expired(self._clock()):
+            self._cancel(req, step)
+            self.stats.deadline_cancelled += 1
+            finished.append(req)
+
+        for req in self.scheduler.admit(step, on_preempt=self._on_preempt):
+            if req.preempted_step >= 0:  # recompute-resume re-admission
+                self.stats.resumes += 1
+                self.stats.resume_latency_steps.append(step - req.preempted_step)
+                self.stats.resume_latency_s.append(
+                    self._clock() - req.preempted_time
+                )
+                req.preempted_step = -1
             if self.pcfg.prefill_chunk:
                 # blocks + slot reserved; the prompt is fed chunkwise
                 # (the slot stays scratch-masked until prefill is done)
@@ -520,6 +585,9 @@ class ContinuousBatchingEngine:
                 if req.is_done():  # max_new_tokens == 1 / stop at first token
                     self._release(req, step)
                     finished.append(req)
+
+        if self.pcfg.preemption == "recompute":
+            self._grow_active(step)
 
         if any(r.prefill_done for r in self.scheduler.running.values()):
             if self.pcfg.spec_k:
@@ -544,11 +612,20 @@ class ContinuousBatchingEngine:
     # -- internals ---------------------------------------------------------
 
     def _do_prefill(self, req: Request) -> None:
+        """Whole-context prefill: the prompt for a fresh request, or —
+        on a recompute-resume — the frozen committed context.  A resume
+        routes through the chunked-prefill gather->attend->scatter path
+        (one whole-width chunk) when the family has one: it is pinned
+        bit-identical to monolithic prefill and shares its compiles
+        with chunked serving."""
+        if req.resume_ctx is not None and self._prefill_chunk is not None:
+            self._resume_via_chunk(req)
+            return
         bs = self.pcfg.block_size
-        plen = req.prompt_len
+        plen = req.prefill_len
         s_pad = padded_prompt_len(plen, bs)
         toks = np.zeros((1, s_pad), np.int32)
-        toks[0, :plen] = req.prompt
+        toks[0, :plen] = req.prefill_tokens
         block_ids = jnp.asarray(req.alloc.blocks[: s_pad // bs], jnp.int32)
         with self._mesh_ctx():
             logits, (self._k_pool, self._v_pool) = self._prefill(
@@ -562,17 +639,61 @@ class ContinuousBatchingEngine:
         req.prefill_pos = plen
         req.verified_len = plen
         req.drafted_len = s_pad  # pad positions hold junk K/V until overwritten
-        tok = int(self._pick_one(logits[0, -1], req, len(req.output)))
-        req.output.append(tok)
-
-        slot = req.slot
-        self._tables[slot] = req.alloc.table_row(self.max_blocks_per_seq)
-        self._lengths[slot] = plen
-        self._last_tok[slot] = tok
+        self._finish_prefill(req, logits[0, -1])
         self.stats.prefills += 1
         self.stats.prefill_tokens += plen
         self.stats.prefill_padding += s_pad - plen
-        self.stats.generated_tokens += 1
+
+    def _resume_via_chunk(self, req: Request) -> None:
+        """Recompute-resume: rewrite the K/V of the committed context
+        into freshly-allocated blocks with ONE padded
+        ``paged_prefill_chunk`` call.  The logits are discarded — the
+        next token after the context is the already-committed last
+        output token, re-fed by the normal decode step — so resume only
+        has to reproduce the K/V, which the chunk path does
+        bit-identically to an uninterrupted run."""
+        bs = self.pcfg.block_size
+        plen = req.prefill_len
+        width = padded_prompt_len(plen, bs)
+        toks = np.zeros((1, width), np.int32)
+        toks[0, :plen] = req.prefill_tokens
+        table_row = jnp.asarray(
+            req.alloc.table_row(self.max_blocks_per_seq), jnp.int32
+        )
+        with self._mesh_ctx():
+            logits, (self._k_pool, self._v_pool) = self._prefill_chunk(
+                self.params,
+                jnp.asarray(toks),
+                self._k_pool,
+                self._v_pool,
+                table_row,
+                jnp.int32(0),
+                jnp.int32(plen - 1),
+            )
+        req.prefill_pos = plen
+        req.verified_len = plen
+        req.drafted_len = width
+        self._finish_prefill(req, logits[0, -1])
+        self.stats.prefills += 1
+        self.stats.prefill_tokens += plen
+        self.stats.prefill_padding += width - plen
+
+    def _finish_prefill(self, req: Request, last_logits) -> None:
+        """Activate a fully-prefilled slot.  Fresh requests sample
+        their first token from the prefill logits; a resumed request
+        already committed that continuation — its last output token is
+        re-fed as the next decode input instead (sampling again would
+        double-emit it)."""
+        if req.output:
+            tok = req.output[-1]
+        else:
+            tok = int(self._pick_one(last_logits, req, len(req.output)))
+            req.output.append(tok)
+            self.stats.generated_tokens += 1
+        slot = req.slot
+        self._tables[slot] = req.alloc.table_row(self.max_blocks_per_seq)
+        self._lengths[slot] = req.prefill_len
+        self._last_tok[slot] = tok
 
     def _do_prefill_chunk(self, req: Request) -> bool:
         """Write ONE chunk of `req`'s prompt into its pool blocks.
@@ -586,11 +707,11 @@ class ContinuousBatchingEngine:
         """
         bs, chunk = self.pcfg.block_size, self.pcfg.prefill_chunk
         start = req.prefill_pos
-        remaining = req.prompt_len - start
+        remaining = req.prefill_len - start
         width = chunk if remaining > chunk else padded_prompt_len(remaining, bs)
         real = min(remaining, chunk)
         toks = np.zeros((1, width), np.int32)
-        toks[0, :real] = req.prompt[start : start + real]
+        toks[0, :real] = req.prefill_tokens[start : start + real]
         table_row = jnp.asarray(
             req.alloc.table_row(self.max_blocks_per_seq), jnp.int32
         )
@@ -612,14 +733,7 @@ class ContinuousBatchingEngine:
         self.stats.prefill_padding += width - real
         if not req.prefill_done:
             return False
-
-        tok = int(self._pick_one(logits[0, -1], req, len(req.output)))
-        req.output.append(tok)
-        slot = req.slot
-        self._tables[slot] = req.alloc.table_row(self.max_blocks_per_seq)
-        self._lengths[slot] = req.prompt_len
-        self._last_tok[slot] = tok
-        self.stats.generated_tokens += 1
+        self._finish_prefill(req, logits[0, -1])
         return True
 
     def _do_decode(self, step: int) -> List[Request]:
@@ -727,6 +841,62 @@ class ContinuousBatchingEngine:
                 self._release(req, step)
                 finished.append(req)
         return finished
+
+    def _grow_active(self, step: int) -> None:
+        """On-demand capacity phase (preemption="recompute"), run just
+        before the decode/verify call: every fully-prefilled sequence
+        must own blocks for the positions this step writes — one for
+        plain decode, spec_k + 1 for a verify burst.  Growth runs most
+        deserving first, so under pool pressure the victims are exactly
+        the least deserving sequences (possibly a grower itself, which
+        is then parked and dropped from this step's batch)."""
+        w = self.pcfg.spec_k + 1 if self.pcfg.spec_k else 1
+        active = sorted(
+            (r for r in self.scheduler.running.values() if r.prefill_done),
+            key=Scheduler.deserving,
+            reverse=True,
+        )
+        for req in active:
+            if req.state is not RequestState.RUNNING:
+                continue  # evicted by a more deserving grower above
+            if self.scheduler.grow(
+                req, req.verified_len + w, self._on_preempt, step
+            ):
+                self._tables[req.slot] = req.alloc.table_row(
+                    self.max_blocks_per_seq
+                )
+
+    def _on_preempt(self, req: Request, slot: int, scrub: List[int]) -> None:
+        """Scheduler preemption callback: scrub every block the victim
+        ever wrote (committed K/V included — the resume recomputes it,
+        so nothing of the evicted sequence may survive in the pool),
+        reset the victim's decode-slot state, and tell a stateful
+        drafter its context bookkeeping is void."""
+        if scrub:
+            self._scrub(scrub)
+        self._tables[slot] = SCRATCH_BLOCK
+        self._lengths[slot] = 0
+        self._last_tok[slot] = 0
+        if req in self._prefilling:  # evicted mid-chunk-prefill
+            self._prefilling.remove(req)
+        if self.drafter is not None:
+            hook = getattr(self.drafter, "on_preempt", None)
+            if hook is not None:
+                hook(req)
+        self.stats.preemptions += 1
+
+    def _cancel(self, req: Request, step: int) -> None:
+        was_running = req.state is RequestState.RUNNING
+        slot = req.slot
+        stale = self.scheduler.cancel(req, step)
+        if was_running:
+            if stale:
+                self._scrub(stale)
+            self._tables[slot] = SCRATCH_BLOCK
+            self._lengths[slot] = 0
+            self._last_tok[slot] = 0
+            if req in self._prefilling:
+                self._prefilling.remove(req)
 
     def _release(self, req: Request, step: int) -> None:
         slot = req.slot

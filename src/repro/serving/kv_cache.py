@@ -86,6 +86,14 @@ class SequenceAllocation:
     def capacity(self) -> int:
         return len(self.blocks) * self.block_size
 
+    def grow(self, blocks: List[int]) -> None:
+        """Append freshly-allocated blocks (on-demand growth under
+        preemptive scheduling): the new blocks extend the sequence's
+        logical position range past the previous capacity."""
+        assert SCRATCH_BLOCK not in blocks
+        assert not set(blocks) & set(self.blocks), "grow with owned block"
+        self.blocks.extend(blocks)
+
     def blocks_covering(self, start: int, stop: int) -> List[int]:
         """Blocks holding logical positions [start, stop) — the
         truncate/rollback primitive.  Speculative decoding writes k+1

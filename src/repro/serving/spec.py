@@ -37,7 +37,20 @@ from .scheduler import Request
 
 @runtime_checkable
 class Drafter(Protocol):
-    """Anything with ``propose(request, k) -> k token ids``."""
+    """Anything with ``propose(request, k) -> k token ids``.
+
+    Preemption contract: a request may be evicted mid-stream and later
+    resumed with its committed context (prompt + output) intact — by
+    the time any drafter sees it again, the engine has already rolled
+    speculative state back to the verified stream, so a drafter that
+    reads only ``req.prompt + req.output`` (both built-ins do) is
+    automatically preemption-safe.  A drafter that caches per-request
+    device state (e.g. a draft-model KV cache keyed by rid) may expose
+    an optional ``on_preempt(req)`` method; the engine calls it when
+    ``req`` is evicted so the cached state can be dropped — on resume
+    the context must be re-derived from the committed tokens, never
+    from pre-preemption bookkeeping.
+    """
 
     def propose(self, req: Request, k: int) -> List[int]:
         """Return EXACTLY k drafted continuation tokens for ``req``

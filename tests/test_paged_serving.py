@@ -28,6 +28,7 @@ from repro.serving import (
     RequestState,
     Scheduler,
     ServeConfig,
+    padded_prompt_len,
 )
 
 CFG = ModelConfig(
@@ -159,6 +160,50 @@ def test_admission_when_pool_exactly_full():
     assert nxt.state is RequestState.WAITING
     sched.retire(req, step=1)
     assert sched.admit(step=1) == [nxt]
+
+
+def test_admission_exact_fit_during_chunked_prefill():
+    """Guard against an admission double-count: while A is mid-chunk-
+    prefill, its in-flight chunk's tail padding lives in blocks A
+    ALREADY owns (the padded prompt and the decode tail are
+    alternatives under one max in blocks_needed, never a sum), so a new
+    request whose whole-lifetime need exactly equals the free pool must
+    be admitted — need == free, not need + re-charged padding > free."""
+    sched, al = _sched(num_blocks=9, block_size=4, max_seq_len=64)
+    a = Request(rid=0, prompt=list(range(12)), max_new_tokens=1)
+    sched.submit(a)
+    assert sched.admit(step=0) == [a]
+    a.prefill_pos = 8  # two of three chunks written: mid-prefill
+    a.verified_len = 8
+    a.drafted_len = 8
+    assert al.num_free == 5
+    b = Request(rid=1, prompt=list(range(17)), max_new_tokens=1)
+    sched.submit(b)
+    # pad(17) = 20 positions -> 5 blocks: exactly the remaining pool
+    assert sched.blocks_needed(b) == 5
+    assert sched.admit(step=1) == [b]
+    assert al.num_free == 0
+    # A's unwritten tail (incl. the ragged final chunk's padding up to
+    # pad(12) = 12) fits the allocation it already owns — nothing about
+    # A's in-flight prefill was charged to the free pool again
+    assert padded_prompt_len(a.prompt_len, 4) <= a.alloc.capacity()
+
+
+def test_admission_exact_fit_during_chunked_prefill_spec():
+    """Same exact-fit guarantee with speculative burst headroom in the
+    reservation: max(pad(17)=20, 17+2-1=18, 17+2-1+2=20) = 20 -> 5
+    blocks, a max not a sum."""
+    al = BlockAllocator(9, 4)
+    sched = Scheduler(al, 4, 64, spec_k=2)
+    a = Request(rid=0, prompt=list(range(12)), max_new_tokens=1)
+    sched.submit(a)
+    assert sched.admit(step=0) == [a]
+    a.prefill_pos = 4  # mid-prefill
+    b = Request(rid=1, prompt=list(range(17)), max_new_tokens=2)
+    sched.submit(b)
+    assert sched.blocks_needed(b) == al.num_free == 5
+    assert sched.admit(step=0) == [b]
+    assert al.num_free == 0
 
 
 # ---------------------------------------------------------------------------
@@ -331,6 +376,44 @@ def test_chunked_sequence_finishes_mid_chunk(params):
     out = cbe.run()[req.rid]
     assert out == [first]
     assert cbe.allocator.num_free == 15
+
+
+def test_engine_admits_exact_fit_while_chunk_prefilling(params):
+    """Engine-level twin of the exact-fit admission guard: B's whole-
+    lifetime reservation equals the free pool at the moment A is still
+    chunk-feeding its prompt.  B must be admitted on that boundary (a
+    double-count of A's in-flight chunk tail padding would make the
+    pool look one block short), and both streams still finish token-
+    identical to their solo unchunked runs."""
+    rng = np.random.default_rng(23)
+    pa = rng.integers(0, 97, 12).tolist()
+    pb = rng.integers(0, 97, 17).tolist()
+
+    def solo(p):
+        e = ContinuousBatchingEngine(
+            CFG, params=params,
+            pcfg=PagedServeConfig(block_size=4, num_blocks=64, max_slots=2,
+                                  max_seq_len=32))
+        r = e.submit(p, max_new_tokens=1)
+        return e.run()[r.rid]
+
+    expect_a, expect_b = solo(pa), solo(pb)
+    eng = ContinuousBatchingEngine(
+        CFG, params=params,
+        pcfg=PagedServeConfig(block_size=4, num_blocks=9, max_slots=2,
+                              max_seq_len=32, prefill_chunk=4))
+    a = eng.submit(pa, max_new_tokens=1)   # 3 blocks of the 8 free
+    b = eng.submit(pb, max_new_tokens=1, arrival_step=1)
+    eng.step()  # A admitted, first chunk written
+    assert 0 < a.prefill_pos < a.prompt_len
+    assert eng.scheduler.blocks_needed(b) == eng.allocator.num_free == 5
+    eng.step()  # B admitted on the exact-fit boundary
+    assert b.admitted_step == 1 and b.state is RequestState.RUNNING
+    assert a.prefill_pos < a.prompt_len  # A really was still mid-prefill
+    assert eng.allocator.num_free == 0
+    done = eng.run()
+    assert done[a.rid] == expect_a and done[b.rid] == expect_b
+    assert eng.allocator.num_free == 8
 
 
 def test_block_reuse_after_retirement_no_aliasing(params):

@@ -1,0 +1,305 @@
+"""Preemptive scheduling (PR 6 acceptance bar).
+
+Preemption is an EXECUTION STRATEGY, not a model: a request evicted
+under pool pressure and later resumed by recomputing its committed
+context must produce exactly the greedy tokens an uninterrupted run
+produces, across chunked/unchunked prefill, spec_k on/off and tp=1/2
+(the tp=2 cases run in a subprocess with forced host devices, like
+tests/test_tp_chunked_serving.py).  Alongside token identity this file
+pins the preemption-path scrub (extends the PR 4 aliasing regression:
+a victim's blocks — committed K/V included — read as zeros once freed),
+deadline-expiry cancellation driven by an injected fake clock,
+priority-ordered victim selection, and client-side cancel.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.modes import NumericsConfig
+from repro.models import build
+from repro.serving import (
+    ContinuousBatchingEngine,
+    PagedServeConfig,
+    RequestState,
+)
+
+CFG = ModelConfig(
+    name="toy-preempt", family="dense", n_layers=2, d_model=32, n_heads=4,
+    n_kv=2, head_dim=8, d_ff=64, vocab=61,
+    numerics=NumericsConfig(mode="posit_quant", n=16, es=1),
+    act_dtype="float32", param_dtype="float32",
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return build(CFG).init(jax.random.PRNGKey(0))
+
+
+def _reference(params, prompt, *, max_new=12, chunk=0, spec=0):
+    """Uninterrupted run: a pool big enough that nothing is evicted."""
+    eng = ContinuousBatchingEngine(
+        CFG, params=params,
+        pcfg=PagedServeConfig(block_size=4, num_blocks=64, max_slots=2,
+                              max_seq_len=32, prefill_chunk=chunk,
+                              spec_k=spec))
+    r = eng.submit(prompt, max_new_tokens=max_new)
+    out = eng.run()[r.rid]
+    assert eng.stats.preemptions == 0
+    return out
+
+
+def _pressure_engine(params, *, chunk=0, spec=0, num_blocks=8, max_slots=2):
+    """A pool with room for roughly one full-length sequence: two
+    concurrent max-length requests MUST collide and force evictions."""
+    return ContinuousBatchingEngine(
+        CFG, params=params,
+        pcfg=PagedServeConfig(block_size=4, num_blocks=num_blocks,
+                              max_slots=max_slots, max_seq_len=32,
+                              preemption="recompute",
+                              prefill_chunk=chunk, spec_k=spec))
+
+
+# ---------------------------------------------------------------------------
+# token identity across the config matrix (tp=1 half; tp=2 is below)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", [0, 2])
+@pytest.mark.parametrize("chunk", [0, 4])
+def test_preempted_stream_token_identical(params, chunk, spec):
+    """Two max-length requests on a pressure pool: the less deserving
+    one is evicted mid-decode (possibly repeatedly), resumed by
+    recompute, and still emits exactly the uninterrupted token stream."""
+    rng = np.random.default_rng(0)
+    pa = rng.integers(0, 61, 8).tolist()
+    pb = rng.integers(0, 61, 8).tolist()
+    expect_a = _reference(params, pa, chunk=chunk, spec=spec)
+    expect_b = _reference(params, pb, chunk=chunk, spec=spec)
+
+    eng = _pressure_engine(params, chunk=chunk, spec=spec)
+    a = eng.submit(pa, max_new_tokens=12)
+    b = eng.submit(pb, max_new_tokens=12, arrival_step=1)
+    done = eng.run()
+    assert eng.stats.preemptions > 0, "pool pressure never forced an eviction"
+    assert done[a.rid] == expect_a, f"survivor diverged (chunk={chunk} spec={spec})"
+    assert done[b.rid] == expect_b, f"victim diverged (chunk={chunk} spec={spec})"
+    # the earlier arrival is more deserving: it is never the victim
+    assert a.preempt_count == 0 and b.preempt_count > 0
+    # nothing was cancelled, so every eviction was eventually resumed,
+    # each with a recorded latency of at least one parked step
+    assert eng.stats.resumes == eng.stats.preemptions
+    assert len(eng.stats.resume_latency_steps) == eng.stats.resumes
+    assert all(s >= 1 for s in eng.stats.resume_latency_steps)
+    # no leak: the whole pool is back on the free list
+    assert eng.allocator.num_free == 7
+    assert not eng.scheduler.has_work()
+
+
+# ---------------------------------------------------------------------------
+# scrub regression on the preemption path
+# ---------------------------------------------------------------------------
+
+def test_preempted_blocks_scrubbed_before_reuse(params):
+    """PR 4's aliasing regression, extended to preemption: evicting a
+    victim frees EVERY block it wrote — committed K/V included, since
+    the resume recomputes it — and the engine must scrub them all, or
+    the free list would hand a future sequence blocks still holding the
+    victim's keys.  Right after the step that evicted b, every
+    free-listed block must read as zeros (spec_k=2 so rolled-back draft
+    tails are in the mix too)."""
+    rng = np.random.default_rng(5)
+    eng = _pressure_engine(params, spec=2)
+    a = eng.submit(rng.integers(0, 61, 8).tolist(), max_new_tokens=12)
+    b = eng.submit(rng.integers(0, 61, 8).tolist(), max_new_tokens=12,
+                   arrival_step=1)
+    steps = 0
+    while b.preempt_count == 0 and steps < 200:
+        eng.step()
+        steps += 1
+    assert b.state is RequestState.PREEMPTED, "pressure never evicted b"
+    free = list(eng.allocator._free)
+    assert free, "eviction must have returned blocks"
+    kp = np.asarray(eng._k_pool)
+    vp = np.asarray(eng._v_pool)
+    assert float(np.abs(kp[:, free]).sum()) == 0.0, (
+        "freed blocks still hold the victim's keys")
+    assert float(np.abs(vp[:, free]).sum()) == 0.0, (
+        "freed blocks still hold the victim's values")
+    # teeth: the survivor's owned blocks ARE nonzero — the scrub is
+    # selective, not a pool-wide wipe
+    assert a.state is RequestState.RUNNING
+    assert float(np.abs(kp[:, a.alloc.blocks]).sum()) > 0.0
+    eng.run()
+    assert eng.allocator.num_free == 7
+
+
+# ---------------------------------------------------------------------------
+# deadlines (injected fake clock)
+# ---------------------------------------------------------------------------
+
+def test_deadline_expiry_cancels_and_keeps_partial_output(params):
+    """A running request whose wall-clock budget expires is cancelled
+    mid-stream keeping its committed output; a never-admitted request
+    with an already-blown deadline is cancelled from the waiting queue
+    with no output; the survivor's tokens are unaffected."""
+    t = [0.0]
+    rng = np.random.default_rng(9)
+    pa = rng.integers(0, 61, 6).tolist()
+    pb = rng.integers(0, 61, 6).tolist()
+    expect_a = _reference(params, pa, max_new=10)
+
+    eng = ContinuousBatchingEngine(
+        CFG, params=params,
+        pcfg=PagedServeConfig(block_size=4, num_blocks=64, max_slots=2,
+                              max_seq_len=32, preemption="recompute",
+                              clock=lambda: t[0]))
+    a = eng.submit(pa, max_new_tokens=10)
+    b = eng.submit(pb, max_new_tokens=10, deadline_s=5.0)
+    c = eng.submit(rng.integers(0, 61, 4).tolist(), max_new_tokens=4,
+                   deadline_s=0.5)  # slots are full: expires while WAITING
+    for _ in range(4):
+        eng.step()
+        t[0] += 1.0
+    assert b.state is RequestState.RUNNING and len(b.output) > 0
+    t[0] = 10.0  # blow b's budget (c's expired during the warm-up steps)
+    done = eng.run()
+    assert b.state is RequestState.CANCELLED
+    assert c.state is RequestState.CANCELLED and c.output == []
+    assert eng.stats.deadline_cancelled == 2
+    assert 0 < len(done[b.rid]) < 10, "committed output must survive cancel"
+    assert done[a.rid] == expect_a
+    assert eng.allocator.num_free == 63
+
+
+# ---------------------------------------------------------------------------
+# priority-ordered victim selection
+# ---------------------------------------------------------------------------
+
+def test_high_priority_preempts_running_low_priority(params):
+    """A later-arriving high-priority request evicts the running
+    low-priority victim at admission, finishes first, and the victim
+    resumes to its exact uninterrupted stream."""
+    rng = np.random.default_rng(13)
+    pl = rng.integers(0, 61, 8).tolist()
+    ph = rng.integers(0, 61, 8).tolist()
+    expect_l = _reference(params, pl, max_new=8)
+    expect_h = _reference(params, ph, max_new=4)
+
+    # 4 free blocks: low alone needs all of them at full length, so
+    # high (3 blocks worst case) cannot be admitted without an eviction
+    eng = _pressure_engine(params, num_blocks=5)
+    low = eng.submit(pl, max_new_tokens=8)
+    high = eng.submit(ph, max_new_tokens=4, arrival_step=2, priority=5)
+    done = eng.run()
+    assert low.preempt_count >= 1, "low-priority request was never evicted"
+    assert high.preempt_count == 0, "high priority must be eviction-immune"
+    assert high.finished_step < low.finished_step
+    assert done[low.rid] == expect_l
+    assert done[high.rid] == expect_h
+    assert eng.allocator.num_free == 4
+
+
+# ---------------------------------------------------------------------------
+# client-side cancel
+# ---------------------------------------------------------------------------
+
+def test_client_cancel_releases_blocks(params):
+    """engine.cancel() mid-stream (preemption OFF — cancel works in
+    both regimes): the stream stops with its committed output, its
+    blocks return to the pool, and the waiting request that inherits
+    them still produces its exact solo tokens."""
+    rng = np.random.default_rng(17)
+    pa = rng.integers(0, 61, 8).tolist()
+    pb = rng.integers(0, 61, 6).tolist()
+    expect_b = _reference(params, pb, max_new=6)
+
+    eng = ContinuousBatchingEngine(
+        CFG, params=params,
+        pcfg=PagedServeConfig(block_size=4, num_blocks=5, max_slots=1,
+                              max_seq_len=16))
+    a = eng.submit(pa, max_new_tokens=8)  # 4 blocks: the whole pool
+    b = eng.submit(pb, max_new_tokens=6)  # must wait for a's blocks
+    for _ in range(3):
+        eng.step()
+    assert a.state is RequestState.RUNNING
+    assert b.state is RequestState.WAITING
+    eng.cancel(a)
+    assert a.state is RequestState.CANCELLED and a.alloc is None
+    assert 0 < len(a.output) < 8
+    eng.cancel(a)  # idempotent no-op on a terminal state
+    done = eng.run()
+    assert done[b.rid] == expect_b
+    assert eng.allocator.num_free == 4
+    assert eng.stats.deadline_cancelled == 0  # client aborts are not misses
+
+
+# ---------------------------------------------------------------------------
+# tp=2 half of the matrix (forced host devices, subprocess)
+# ---------------------------------------------------------------------------
+
+_TP_SCRIPT = textwrap.dedent("""
+    import numpy as np, jax
+    from repro.configs.base import ModelConfig
+    from repro.core.modes import NumericsConfig
+    from repro.models import build
+    from repro.serving import ContinuousBatchingEngine, PagedServeConfig
+
+    assert len(jax.devices()) >= 2, jax.devices()
+
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+        n_heads=4, n_kv=2, head_dim=8, d_ff=64, vocab=61,
+        numerics=NumericsConfig(mode="posit_quant", n=16, es=1),
+        act_dtype="float32", param_dtype="float32")
+    params = build(cfg).init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    pa = rng.integers(0, 61, 8).tolist()
+    pb = rng.integers(0, 61, 8).tolist()
+
+    def run(tp, chunk, spec, num_blocks, preemption):
+        eng = ContinuousBatchingEngine(cfg, params=params,
+            pcfg=PagedServeConfig(block_size=4, num_blocks=num_blocks,
+                                  max_slots=2, max_seq_len=32, tp=tp,
+                                  prefill_chunk=chunk, spec_k=spec,
+                                  preemption=preemption))
+        a = eng.submit(pa, max_new_tokens=12)
+        b = eng.submit(pb, max_new_tokens=12, arrival_step=1)
+        done = eng.run()
+        return [done[a.rid], done[b.rid]], eng
+
+    # unchunked+spec_k=0 and chunked+spec_k=2, each preempted under a
+    # sharded pressure pool vs. an uninterrupted tp=1 big-pool run
+    for chunk, spec in ((0, 0), (4, 2)):
+        base, _ = run(1, chunk, spec, 64, "off")
+        tp2, eng = run(2, chunk, spec, 8, "recompute")
+        assert eng.stats.preemptions > 0, (chunk, spec)
+        assert eng.allocator.num_free == 7, (chunk, spec)
+        assert base == tp2, (
+            f"preempted tp2 diverged chunk={chunk} spec={spec}: "
+            f"{base} vs {tp2}")
+    print("PREEMPT-TP2-OK")
+""")
+
+
+@pytest.mark.slow
+def test_tp2_preempted_token_identical_forced_devices():
+    """Preempt-and-resume under tp=2 sharding (head-sharded KV pool) is
+    greedy-token-identical to the uninterrupted tp=1 engine, unchunked
+    and chunked+speculative.  Subprocess: the forced device count must
+    be set before jax initializes."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8")
+    env["JAX_PLATFORMS"] = "cpu"
+    src_dir = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src_dir) + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", _TP_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "PREEMPT-TP2-OK" in proc.stdout

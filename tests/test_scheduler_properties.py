@@ -2,28 +2,47 @@
 
 Shim-compatible (tests/_hypothesis_shim.py): drives randomized request
 streams — staggered arrivals, random prompt/output lengths, random
-early finishes, speculative bursts with random acceptance — through
-the REAL Scheduler + BlockAllocator (no model, no device work) and
-asserts the structural invariants every engine build relies on:
+early finishes, speculative bursts with random acceptance, and (under
+``preemption="recompute"``) forced pool pressure with random
+priorities, deadlines and mid-stream client cancels — through the REAL
+Scheduler + BlockAllocator (no model, no device work) and asserts the
+structural invariants every engine build relies on:
 
 * no block is owned by two live sequences (no double allocation);
 * block 0 (scratch) is never handed out;
 * free-list cardinality + owned blocks == pool size at every step, and
-  the free list is fully restored once all requests retire (no leaks);
+  the free list is fully restored once every request finishes or is
+  cancelled (no leaks);
 * ``verified_len <= drafted_len <= reserved capacity`` at every step —
-  the speculative write burst can never escape a sequence's own blocks.
+  the speculative write burst can never escape a sequence's own blocks;
+* a preempted request holds ZERO blocks and no slot while parked;
+* the committed length (prompt + generated output) is monotone per
+  request across preempt/resume cycles — eviction resets the cache
+  bookkeeping, never the stream;
+* every admitted request eventually finishes or is deadline-cancelled
+  (the deservingness total order rules out livelock).
+
+``REPRO_PROP_MULT`` multiplies every ``max_examples`` (the CI stress
+job runs at 10x) and ``REPRO_PROP_SEED`` offsets the derived rng
+streams so a seed matrix explores disjoint example sets.
 """
+import os
+
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from repro.serving import (
     BlockAllocator,
     Request,
+    RequestState,
     Scheduler,
     SequenceAllocation,
     SCRATCH_BLOCK,
     padded_prompt_len,
 )
+
+_MULT = int(os.environ.get("REPRO_PROP_MULT", "1"))
+_SEED = int(os.environ.get("REPRO_PROP_SEED", "0"))
 
 
 def _check_invariants(sched: Scheduler, al: BlockAllocator) -> None:
@@ -34,9 +53,12 @@ def _check_invariants(sched: Scheduler, al: BlockAllocator) -> None:
     for r in sched.running.values():
         assert r.verified_len <= r.drafted_len <= r.alloc.capacity(), (
             r.rid, r.verified_len, r.drafted_len, r.alloc.capacity())
+    for r in sched.preempted:
+        assert r.alloc is None and r.slot == -1, (
+            "preempted request still holds blocks/slot", r.rid)
 
 
-@settings(max_examples=25, deadline=None)
+@settings(max_examples=25 * _MULT, deadline=None)
 @given(
     st.integers(min_value=0, max_value=10_000),
     st.integers(min_value=2, max_value=5),
@@ -44,7 +66,7 @@ def _check_invariants(sched: Scheduler, al: BlockAllocator) -> None:
     st.integers(min_value=0, max_value=4),
 )
 def test_random_stream_preserves_invariants(seed, block_size, max_slots, spec_k):
-    rng = np.random.default_rng(seed + 1)
+    rng = np.random.default_rng(seed + 1 + _SEED * 100_003)
     num_blocks = int(rng.integers(6, 40))
     max_seq_len = int(rng.integers(8, 64))
     al = BlockAllocator(num_blocks, block_size)
@@ -100,7 +122,7 @@ def test_random_stream_preserves_invariants(seed, block_size, max_slots, spec_k)
     assert not sched.running and not sched.waiting
 
 
-@settings(max_examples=50, deadline=None)
+@settings(max_examples=50 * _MULT, deadline=None)
 @given(
     st.integers(min_value=1, max_value=8),
     st.integers(min_value=1, max_value=6),
@@ -123,14 +145,14 @@ def test_blocks_covering_matches_bruteforce(n_blocks, block_size, start, stop):
     assert got == brute, (start, stop, block_size, got, brute)
 
 
-@settings(max_examples=25, deadline=None)
+@settings(max_examples=25 * _MULT, deadline=None)
 @given(st.integers(min_value=0, max_value=10_000), st.integers(min_value=1, max_value=4))
 def test_retire_reports_exactly_the_stale_blocks(seed, spec_k):
     """What retire() hands back for scrubbing is precisely the blocks
     covering [verified_len, drafted_len) — no more (committed-only
     blocks are reusable as-is under the length masks), no fewer (every
     block holding never-committed K/V is scrubbed)."""
-    rng = np.random.default_rng(seed)
+    rng = np.random.default_rng(seed + _SEED * 100_003)
     bs = int(rng.integers(2, 6))
     al = BlockAllocator(64, bs)
     sched = Scheduler(al, 2, 64, spec_k=spec_k)
@@ -147,3 +169,121 @@ def test_retire_reports_exactly_the_stale_blocks(seed, spec_k):
     expect = req.alloc.blocks_covering(req.verified_len, req.drafted_len)
     assert sched.retire(req, step=1) == expect
     assert al.num_free == al.num_blocks - 1
+
+
+# ---------------------------------------------------------------------------
+# preemptive scheduling (preemption="recompute")
+# ---------------------------------------------------------------------------
+
+def _sim_prefill(req: Request, block_size: int) -> None:
+    """What the engine does when a request is (re)admitted: write the
+    whole block-padded prefill context in one shot.  Fresh requests
+    sample their first token from the prefill logits; a resumed request
+    already committed that token (it is re-fed to decode instead)."""
+    req.prefill_pos = req.prefill_len
+    req.verified_len = req.prefill_len
+    req.drafted_len = padded_prompt_len(req.prefill_len, block_size)
+    if not req.output:
+        req.output.append(0)
+
+
+@settings(max_examples=25 * _MULT, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=10_000),
+    st.integers(min_value=2, max_value=5),
+    st.integers(min_value=1, max_value=4),
+    st.integers(min_value=0, max_value=3),
+)
+def test_preemptive_stream_preserves_invariants(seed, block_size, max_slots,
+                                                spec_k):
+    """Random streams under FORCED pool pressure (pools sized so
+    concurrent requests must collide), random priorities, wall-clock
+    deadlines on a fake clock, and random mid-stream client cancels —
+    driven through the real preemptive scheduler.  On top of the base
+    invariants (checked after every mutation): parked requests hold
+    zero blocks, committed length is monotone across preempt/resume,
+    and every submitted request eventually finishes or is cancelled."""
+    rng = np.random.default_rng(seed + 1 + _SEED * 100_003)
+    num_blocks = int(rng.integers(4, 14))
+    max_seq_len = int(rng.integers(8, 40))
+    clock = [0.0]
+    al = BlockAllocator(num_blocks, block_size)
+    sched = Scheduler(al, max_slots, max_seq_len, spec_k=spec_k,
+                      preemption="recompute", clock=lambda: clock[0])
+
+    reqs = []
+    arrival = 0
+    for rid in range(int(rng.integers(2, 14))):
+        plen = int(rng.integers(1, max_seq_len))
+        max_new = int(rng.integers(1, max_seq_len - plen + 1))
+        req = Request(
+            rid=rid, prompt=[rid % 7] * plen, max_new_tokens=max_new,
+            arrival_step=arrival,
+            priority=int(rng.integers(0, 3)),
+            deadline_s=(float(rng.integers(1, 40))
+                        if rng.random() < 0.3 else None),
+            submit_time=clock[0])
+        arrival += int(rng.integers(0, 3))
+        try:
+            sched.submit(req)
+        except ValueError:
+            continue  # could never fit the pool: rejected at submit
+        reqs.append(req)
+
+    committed_hwm = {r.rid: r.committed_len for r in reqs}
+
+    def check():
+        _check_invariants(sched, al)
+        for r in reqs:
+            assert r.committed_len >= committed_hwm[r.rid], (
+                "committed stream shrank across preempt/resume", r.rid)
+            committed_hwm[r.rid] = r.committed_len
+
+    w = spec_k + 1 if spec_k else 1
+    step = 0
+    while sched.has_work():
+        clock[0] += float(rng.random())
+        for req in sched.expired(clock[0]):
+            sched.cancel(req, step)
+            check()
+        for req in sched.admit(step, on_preempt=None):
+            _sim_prefill(req, block_size)
+            check()
+        # growth + decode, most deserving first (the engine's order —
+        # victims under pressure are exactly the least deserving)
+        for req in sorted(sched.running.values(), key=Scheduler.deserving,
+                          reverse=True):
+            if req.state is not RequestState.RUNNING:
+                continue  # evicted by a more deserving grower this step
+            if rng.random() < 0.04:
+                sched.cancel(req, step)  # client abort mid-stream
+                check()
+                continue
+            if req.is_done() or (req.output and rng.random() < 0.10):
+                sched.retire(req, step)  # natural or stop-token finish
+                check()
+                continue
+            if not sched.grow(req, req.verified_len + w, None, step):
+                check()  # self-preempted: parked holding nothing
+                continue
+            if spec_k:
+                base = req.verified_len
+                req.drafted_len = max(req.drafted_len, base + w)
+                commit = min(int(rng.integers(1, w + 1)),
+                             req.max_new_tokens - len(req.output))
+                sched.rollback(req, base + commit)
+                req.output.extend([0] * commit)
+            else:
+                req.verified_len += 1
+                req.drafted_len = max(req.drafted_len, req.verified_len)
+                req.output.append(0)
+            check()
+        step += 1
+        assert step < 20_000, "stream did not drain (livelock?)"
+
+    for r in reqs:
+        assert r.state in (RequestState.FINISHED, RequestState.CANCELLED), (
+            "request neither finished nor cancelled", r.rid, r.state)
+        assert r.alloc is None and r.slot == -1
+    assert al.num_free == al.num_blocks - 1, "free list not restored"
+    assert not sched.running and not sched.waiting and not sched.preempted
