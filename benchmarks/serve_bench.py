@@ -83,14 +83,20 @@ def make_overload_stream(seed: int = 0):
     return sorted(entries, key=lambda e: e[2])
 
 
-def bench_overload(base_cfg, params, *, preemption, seed=0):
+def bench_overload(base_cfg, params, *, preemption, seed=0,
+                   trace_out=None, metrics_out=None):
     """Overload scenario: the pool holds ~2 of the 4 concurrent long
     requests, so the shorts must either queue behind them (FCFS,
     preemption="off") or evict them (priority victims under
     "recompute").  The metric that separates the regimes is the SHORT
     requests' completion latency in engine steps — wall-clock would
     mostly measure CPU compile noise.  Deadlines tick on an injected
-    step-counting clock, so the miss rate is deterministic too."""
+    step-counting clock, so the miss rate is deterministic — and so are
+    the per-request queue/prefill/decode/parked breakdowns the trace
+    derives (clock units are engine steps here, not seconds).
+    ``trace_out`` / ``metrics_out`` write the run's trace (JSON-lines)
+    and Prometheus snapshot — the artifacts CI uploads and
+    schema-checks."""
     import numpy as np
 
     from repro.serving import ContinuousBatchingEngine, PagedServeConfig
@@ -113,10 +119,26 @@ def bench_overload(base_cfg, params, *, preemption, seed=0):
 
     from repro.serving import RequestState
 
+    eng.trace.validate()
     shorts = [r for r, e in zip(reqs, stream) if e[3] > 0]
     finished_shorts = [r for r in shorts if r.state is RequestState.FINISHED]
     short_lat = [r.finished_step - r.arrival_step for r in finished_shorts]
     with_deadline = [r for r in reqs if r.deadline_s is not None]
+    # the injected clock counts engine steps, so these breakdowns are
+    # deterministic: where each short request's lifetime went, in steps
+    short_breakdowns = {}
+    for r in shorts:
+        bd = eng.trace.breakdown(r.rid)
+        short_breakdowns[r.rid] = {
+            "queue_steps": bd.queue_s, "prefill_steps": bd.prefill_s,
+            "decode_steps": bd.decode_s, "parked_steps": bd.parked_s,
+            "total_steps": bd.total_s, "terminal": bd.terminal,
+        }
+    if trace_out:
+        eng.trace.to_jsonl(trace_out)
+    if metrics_out:
+        with open(metrics_out, "w") as f:
+            f.write(eng.metrics.to_prometheus_text())
     return {
         "engine": "overload",
         "preemption": preemption,
@@ -125,14 +147,15 @@ def bench_overload(base_cfg, params, *, preemption, seed=0):
         "short_p95_latency_steps": (
             float(np.quantile(np.asarray(short_lat), 0.95))
             if short_lat else float("nan")),
-        "preemptions": eng.stats.preemptions,
-        "resumes": eng.stats.resumes,
+        "short_breakdowns": short_breakdowns,
+        "preemptions": int(eng.metrics.value("serve_preemptions_total")),
+        "resumes": int(eng.metrics.value("serve_resumes_total")),
         "resume_latency_steps_mean": (
             float(np.mean(eng.stats.resume_latency_steps))
             if eng.stats.resume_latency_steps else 0.0),
         "deadline_miss_rate": (
-            eng.stats.deadline_cancelled / len(with_deadline)
-            if with_deadline else 0.0),
+            eng.metrics.value("serve_deadline_cancelled_total")
+            / len(with_deadline) if with_deadline else 0.0),
         "tokens": {r.rid: list(r.output) for r in reqs
                    if r.state is RequestState.FINISHED},
     }
@@ -182,18 +205,26 @@ def bench_static(base_cfg, params, stream):
 
 
 def bench_continuous(base_cfg, params, stream, *, tp=1, prefill_chunk=0,
-                     spec_k=0, warmup=True):
+                     spec_k=0, warmup=True, trace=True):
+    """One continuous-engine configuration.  Post-redesign, everything
+    this reports is read from the engine's MetricsRegistry (the same
+    names a Prometheus scrape would see) rather than ServeStats fields;
+    per-request submit->first-token / submit->finish percentiles come
+    from the trace.  ``trace=False`` measures the engine with recording
+    disabled — the pair of runs is the trace-overhead check."""
     from repro.serving import ContinuousBatchingEngine, PagedServeConfig, ServeStats
 
     pcfg = PagedServeConfig(block_size=8, num_blocks=256, max_slots=8,
                             max_seq_len=128, tp=tp, prefill_chunk=prefill_chunk,
-                            spec_k=spec_k)
+                            spec_k=spec_k, trace=trace)
     eng = ContinuousBatchingEngine(base_cfg, params=params, pcfg=pcfg)
     if warmup:  # compile prefill buckets/chunks + the decode step off the clock
         for p, m, _ in stream:
             eng.submit(p, max_new_tokens=m, arrival_step=0)
         eng.run()
         eng.stats = ServeStats()
+        if eng.trace is not None:
+            eng.trace.clear()
     base_step = eng.current_step  # arrival steps are absolute
     reqs = []
     for p, m, s in stream:
@@ -203,22 +234,35 @@ def bench_continuous(base_cfg, params, stream, *, tp=1, prefill_chunk=0,
     dt = time.perf_counter() - t0
     useful = sum(len(v) for v in done.values())
     assert useful == sum(m for _, m, _ in stream), "engine dropped tokens"
-    return {
+    step_hist = eng.metrics.histogram("serve_step_latency_seconds")
+    row = {
         "engine": "continuous",
         "tp": tp,
         "prefill_chunk": prefill_chunk,
         "spec_k": spec_k,
+        "trace": trace,
         "wall_s": dt,
         "useful_tokens": useful,
         "tok_per_s": useful / dt,
-        "p50_step_ms": eng.stats.latency_p50() * 1e3,
-        "p95_step_ms": eng.stats.latency_p95() * 1e3,
-        "padding_waste": eng.stats.padding_waste(),
-        "steps": eng.stats.steps,
-        "acceptance_rate": eng.stats.acceptance_rate(),
-        "tokens_per_verify_step": eng.stats.tokens_per_verify_step(),
+        "p50_step_ms": step_hist.quantile(0.50) * 1e3,
+        "p95_step_ms": step_hist.quantile(0.95) * 1e3,
+        "padding_waste": eng.metrics.value("serve_padding_waste"),
+        "steps": int(eng.metrics.value("serve_steps_total")),
+        "acceptance_rate": eng.metrics.value("serve_spec_acceptance_rate"),
+        "tokens_per_verify_step": eng.metrics.value(
+            "serve_tokens_per_verify_step"),
         "tokens": [done[r.rid] for r in reqs],
     }
+    if eng.trace is not None:
+        eng.trace.validate()
+        summary = eng.trace.latency_summary()
+        row.update({
+            "req_ttft_p50_s": summary["first_token_p50_s"],
+            "req_ttft_p95_s": summary["first_token_p95_s"],
+            "req_total_p50_s": summary["total_p50_s"],
+            "req_total_p95_s": summary["total_p95_s"],
+        })
+    return row
 
 
 def main():
@@ -238,6 +282,12 @@ def main():
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write results (tokens/s, p95 step latency, "
                          "padding-waste %%) as JSON, e.g. BENCH_serving.json")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the overload-recompute run's trace events as "
+                         "JSON-lines (the artifact CI schema-checks)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the overload-recompute run's Prometheus text "
+                         "snapshot (the artifact CI schema-checks)")
     ap.add_argument("--force-host-devices", type=int, default=0,
                     help="force N CPU devices via XLA_FLAGS (set before jax "
                          "initializes; how CI gets a tp-capable host)")
@@ -291,6 +341,24 @@ def main():
                                      tp=tp, prefill_chunk=chunk,
                                      spec_k=spec_k))
 
+    # trace-overhead check: the same tp=1 unchunked configuration with
+    # recording disabled.  Tracing is on by default, so the delta must
+    # stay well under the 5% tok/s budget at real step costs — at toy
+    # CPU scale both runs are dispatch-noise-dominated, so the recorded
+    # number is the honest measurement, not a pass/fail gate.
+    off_row = bench_continuous(base_cfg, params, stream, trace=False)
+    on_row = next(r for r in rows
+                  if r["engine"] == "continuous" and r["tp"] == 1
+                  and r["prefill_chunk"] == 0 and r["spec_k"] == 0)
+    assert off_row["tokens"] == on_row["tokens"], (
+        "disabling tracing changed the generated tokens")
+    off_row.pop("tokens")
+    trace_overhead = {
+        "tok_per_s_trace_on": on_row["tok_per_s"],
+        "tok_per_s_trace_off": off_row["tok_per_s"],
+        "overhead_frac": 1.0 - on_row["tok_per_s"] / off_row["tok_per_s"],
+    }
+
     # greedy decode must be configuration-invariant: every continuous
     # config — including the speculative ones — generates the same
     # per-request tokens (CI fails here first)
@@ -308,7 +376,8 @@ def main():
     overload_rows = [
         bench_overload(base_cfg, params, preemption="off", seed=args.seed),
         bench_overload(base_cfg, params, preemption="recompute",
-                       seed=args.seed),
+                       seed=args.seed, trace_out=args.trace_out,
+                       metrics_out=args.metrics_out),
     ]
     off_toks, on_toks = [r.pop("tokens") for r in overload_rows]
     both = sorted(set(off_toks) & set(on_toks))
@@ -333,6 +402,15 @@ def main():
     print(f"\npadding waste: static {s['padding_waste']:.1%} -> "
           f"continuous {c['padding_waste']:.1%}; token_identical across "
           f"{len(token_sets)} continuous configs: {token_identical}")
+    print(f"trace overhead (tp=1 unchunked): "
+          f"{trace_overhead['tok_per_s_trace_on']:.1f} tok/s traced vs "
+          f"{trace_overhead['tok_per_s_trace_off']:.1f} untraced "
+          f"({trace_overhead['overhead_frac']:+.1%})")
+    print(f"per-request latency (tp=1 unchunked, traced): "
+          f"ttft p50={c['req_ttft_p50_s'] * 1e3:.1f}ms "
+          f"p95={c['req_ttft_p95_s'] * 1e3:.1f}ms; total "
+          f"p50={c['req_total_p50_s'] * 1e3:.1f}ms "
+          f"p95={c['req_total_p95_s'] * 1e3:.1f}ms")
 
     print(f"\n{'overload':<12}{'preempt':>10}{'short_p95':>11}{'steps':>7}"
           f"{'evict':>7}{'resume':>8}{'rsm_lat':>9}{'dl_miss':>9}")
@@ -351,6 +429,7 @@ def main():
             "devices": len(jax.devices()),
             "token_identical": token_identical,
             "rows": rows,
+            "trace_overhead": trace_overhead,
             "overload": overload_rows,
         }
         with open(args.json, "w") as f:

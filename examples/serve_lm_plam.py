@@ -11,6 +11,11 @@ should match the exact-posit output almost always (bounded 11.1%
 per-product error is far below the logit decision margin), and the
 engine's padding-waste stats show what continuous batching buys.
 
+Uses the redesigned serving API throughout: one ``ServeOptions``,
+``build_engine`` picking the continuous engine for the dense family,
+``submit()`` handles with per-request latency breakdowns, and the
+metrics registry for the per-mode stats line.
+
 Run:  PYTHONPATH=src python examples/serve_lm_plam.py
 """
 import numpy as np
@@ -22,7 +27,7 @@ from repro.core.modes import NumericsConfig
 from repro.data.synthetic import DataConfig, lm_batch
 from repro.models import build
 from repro.optim.optimizers import OptConfig, init_state
-from repro.serving import ContinuousBatchingEngine, PagedServeConfig
+from repro.serving import ServeOptions, build_engine
 from repro.train.loop import TrainConfig, make_train_step
 
 BASE = ModelConfig(
@@ -50,20 +55,24 @@ for i in range(6):
     plen = int(rng.integers(6, 24))
     stream.append((rng.integers(0, 256, plen).tolist(), i))  # arrive at step i
 
+opts = ServeOptions(max_new_tokens=12, block_size=8, num_blocks=64,
+                    max_slots=3, max_seq_len=64)
 outs = {}
 for mode in ["f32", "posit_quant", "plam_sim"]:
     cfg = BASE.with_numerics(NumericsConfig(mode=mode, n=16, es=1))
-    eng = ContinuousBatchingEngine(
-        cfg, params=params,
-        pcfg=PagedServeConfig(block_size=8, num_blocks=64, max_slots=3,
-                              max_seq_len=64))
-    reqs = [eng.submit(p, max_new_tokens=12, arrival_step=s)
-            for p, s in stream]
+    eng = build_engine(cfg, opts, params=params)  # dense -> continuous
+    handles = [eng.submit(p, arrival_step=s, **opts.submit_kwargs())
+               for p, s in stream]
     done = eng.run()
-    outs[mode] = np.asarray([done[r.rid] for r in reqs])
+    outs[mode] = np.asarray([done[h.rid] for h in handles])
+    bd = handles[0].breakdown()
     print(f"[{mode:12s}] request0 tokens: {outs[mode][0].tolist()}  "
-          f"(steps={eng.stats.steps}, "
-          f"pad_waste={eng.stats.padding_waste():.1%})")
+          f"(steps={int(eng.metrics.value('serve_steps_total'))}, "
+          f"pad_waste={eng.metrics.value('serve_padding_waste'):.1%}, "
+          f"req0 ttft={bd.first_token_s * 1e3:.0f}ms "
+          f"queue/prefill/decode="
+          f"{bd.queue_s * 1e3:.0f}/{bd.prefill_s * 1e3:.0f}/"
+          f"{bd.decode_s * 1e3:.0f}ms)")
 
 agree_pq = (outs["posit_quant"] == outs["f32"]).mean()
 agree_pl = (outs["plam_sim"] == outs["posit_quant"]).mean()

@@ -1,4 +1,18 @@
-"""Serving layer: static batcher + continuous-batching paged engine."""
+"""Serving layer: static batcher + continuous-batching paged engine.
+
+The supported public surface is ``__all__`` — the six names an
+application needs (engines, options, handles, tracing, metrics); see
+``repro.serving.api`` for the redesign story.  The remaining imports
+(allocator, scheduler, drafters, legacy configs) stay importable for
+tests and power users but are internal: their signatures may change
+between PRs without a deprecation cycle.
+"""
+from .api import (  # noqa: F401
+    PAGED_FAMILIES,
+    ServeOptions,
+    SubmitHandle,
+    build_engine,
+)
 from .engine import (  # noqa: F401
     ContinuousBatchingEngine,
     Engine,
@@ -13,6 +27,14 @@ from .kv_cache import (  # noqa: F401
     SequenceAllocation,
     padded_prompt_len,
 )
+from .observability import (  # noqa: F401
+    MetricsRegistry,
+    RequestBreakdown,
+    TraceEvent,
+    TraceRecorder,
+    check_request_events,
+    derive_breakdown,
+)
 from .scheduler import Request, RequestState, Scheduler  # noqa: F401
 from .spec import (  # noqa: F401
     Drafter,
@@ -20,3 +42,12 @@ from .spec import (  # noqa: F401
     NgramDrafter,
     make_drafter,
 )
+
+__all__ = [
+    "Engine",
+    "ContinuousBatchingEngine",
+    "ServeOptions",
+    "SubmitHandle",
+    "TraceRecorder",
+    "MetricsRegistry",
+]

@@ -1,0 +1,262 @@
+"""The public serving API: options, engine factory, request handles.
+
+This module is the redesigned front door for serving — everything an
+application needs lives behind four names:
+
+* :class:`ServeOptions` — ONE options dataclass replacing the split
+  ``ServeConfig`` (static engine) / ``PagedServeConfig`` (continuous
+  engine) pair.  Options are grouped per-request / sampling / engine /
+  observability; :meth:`ServeOptions.paged` and
+  :meth:`ServeOptions.static` project onto the legacy configs (which
+  remain the engines' internal representation), and
+  :meth:`ServeOptions.from_legacy` lifts an old config into options
+  with a :class:`DeprecationWarning` so existing call sites keep
+  working while they migrate.
+* :func:`build_engine` — family-aware factory: ``engine="auto"`` picks
+  the continuous-batching engine for families with a paged KV layout
+  (dense / moe) and the static engine otherwise (ssm / hybrid / encdec
+  / vlm caches are not paged).
+* :class:`SubmitHandle` — what ``ContinuousBatchingEngine.submit``
+  returns: a future-like view of one request exposing ``result()`` /
+  ``cancel()`` / ``trace()`` / ``breakdown()`` and delegating every
+  ``Request`` attribute, so pre-redesign code that treated the return
+  value as a ``Request`` is untouched.
+* ``engine.stream(prompt, ...)`` — incremental tokens + trace events
+  (defined on the engine; re-exported story documented here).
+
+Typical use::
+
+    from repro.serving import ServeOptions, build_engine
+
+    opts = ServeOptions(max_new_tokens=64, prefill_chunk=16, spec_k=4)
+    eng = build_engine(cfg, opts)
+    handle = eng.submit(prompt, max_new_tokens=64)
+    tokens = handle.result()          # drives the engine to completion
+    print(handle.breakdown())         # queue/prefill/decode/parked split
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import List, Optional
+
+from repro.configs.base import ModelConfig
+
+from .engine import ContinuousBatchingEngine, Engine, PagedServeConfig, ServeConfig
+from .scheduler import Request, RequestState
+
+#: families served by the continuous-batching engine under engine="auto"
+PAGED_FAMILIES = ("dense", "moe")
+
+
+@dataclasses.dataclass
+class ServeOptions:
+    """Unified serving options (supersedes ServeConfig/PagedServeConfig).
+
+    Field groups:
+
+    * request defaults — per-request knobs ``submit()`` also accepts;
+      values here are the defaults used by ``stream()`` and the
+      launcher.
+    * sampling — shared by both engines.
+    * engine — capacity/parallelism/speculation/preemption; only
+      meaningful for the continuous engine (the static engine ignores
+      them, matching the old ServeConfig surface).
+    * observability — tracing / profiling / step timing.
+    """
+
+    # -- request defaults --------------------------------------------------
+    max_new_tokens: int = 16
+    stop_token: Optional[int] = None
+    priority: int = 0
+    deadline_s: Optional[float] = None
+
+    # -- sampling ----------------------------------------------------------
+    temperature: float = 0.0  # 0 => greedy
+    seed: int = 0
+
+    # -- engine (continuous batching) --------------------------------------
+    engine: str = "auto"  # "auto" | "continuous" | "static"
+    block_size: int = 16
+    num_blocks: int = 128
+    max_slots: int = 4
+    max_seq_len: int = 256
+    cache_dtype: str = "bfloat16"
+    use_kernel: Optional[bool] = None
+    tp: int = 1
+    prefill_chunk: int = 0
+    prequantize: bool = False
+    spec_k: int = 0
+    spec_draft: object = "ngram"
+    preemption: str = "off"
+    clock: Optional[object] = None
+
+    # -- observability -----------------------------------------------------
+    trace: bool = True
+    profile: bool = False
+    time_steps: bool = False  # static engine: sync + time each step
+
+    def paged(self) -> PagedServeConfig:
+        """Project onto the continuous engine's internal config."""
+        return PagedServeConfig(
+            block_size=self.block_size,
+            num_blocks=self.num_blocks,
+            max_slots=self.max_slots,
+            max_seq_len=self.max_seq_len,
+            temperature=self.temperature,
+            seed=self.seed,
+            cache_dtype=self.cache_dtype,
+            use_kernel=self.use_kernel,
+            tp=self.tp,
+            prefill_chunk=self.prefill_chunk,
+            prequantize=self.prequantize,
+            spec_k=self.spec_k,
+            spec_draft=self.spec_draft,
+            preemption=self.preemption,
+            clock=self.clock,
+            trace=self.trace,
+            profile=self.profile,
+        )
+
+    def static(self) -> ServeConfig:
+        """Project onto the static engine's internal config."""
+        return ServeConfig(
+            max_new_tokens=self.max_new_tokens,
+            temperature=self.temperature,
+            seed=self.seed,
+            time_steps=self.time_steps,
+        )
+
+    def submit_kwargs(self) -> dict:
+        """The per-request defaults as ``submit()`` keyword arguments."""
+        return dict(
+            max_new_tokens=self.max_new_tokens,
+            stop_token=self.stop_token,
+            priority=self.priority,
+            deadline_s=self.deadline_s,
+        )
+
+    @classmethod
+    def from_legacy(cls, cfg, **overrides) -> "ServeOptions":
+        """Lift a legacy ``ServeConfig`` / ``PagedServeConfig`` into
+        options, warning once per call site.  ``overrides`` are applied
+        on top (e.g. ``from_legacy(pcfg, max_new_tokens=64)``)."""
+        if isinstance(cfg, PagedServeConfig):
+            fields = {
+                f.name: getattr(cfg, f.name)
+                for f in dataclasses.fields(PagedServeConfig)
+            }
+            fields["engine"] = "continuous"
+        elif isinstance(cfg, ServeConfig):
+            fields = dict(
+                max_new_tokens=cfg.max_new_tokens,
+                temperature=cfg.temperature,
+                seed=cfg.seed,
+                time_steps=cfg.time_steps,
+                engine="static",
+            )
+        else:
+            raise TypeError(
+                f"expected ServeConfig or PagedServeConfig, got {type(cfg)!r}"
+            )
+        warnings.warn(
+            f"{type(cfg).__name__} is deprecated as a public surface; "
+            "construct repro.serving.ServeOptions instead (this shim maps "
+            "fields 1:1 and will keep working)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        fields.update(overrides)
+        return cls(**fields)
+
+
+class SubmitHandle:
+    """Future-like view of one submitted request.
+
+    Returned by ``ContinuousBatchingEngine.submit``.  Every ``Request``
+    attribute (``rid``, ``state``, ``output``, ``finished_step``, ...)
+    is delegated, so code written against the old Request-returning
+    ``submit`` runs unchanged; new code gets:
+
+    * :meth:`result` — drive the engine until this request reaches a
+      terminal state, then return its committed tokens;
+    * :meth:`cancel` — client-side abort (keeps committed output);
+    * :meth:`trace` — this request's trace events (empty when tracing
+      is off);
+    * :meth:`breakdown` — queue/prefill/decode/parked latency split
+      derived from the trace (None when tracing is off).
+    """
+
+    __slots__ = ("_engine", "_request")
+
+    def __init__(self, engine: ContinuousBatchingEngine, request: Request):
+        self._engine = engine
+        self._request = request
+
+    @property
+    def request(self) -> Request:
+        """The underlying scheduler Request (escape hatch)."""
+        return self._request
+
+    def result(self) -> List[int]:
+        """Block (drive ``engine.step()``) until this request finishes
+        or is cancelled; returns the committed output tokens.  Other
+        queued requests keep making progress — this drives the shared
+        engine loop, it does not serialize the engine to one request."""
+        while self._request.state not in (
+            RequestState.FINISHED,
+            RequestState.CANCELLED,
+        ):
+            self._engine.step()
+        return self._request.output
+
+    def cancel(self) -> None:
+        self._engine.cancel(self._request)
+
+    def trace(self) -> list:
+        """This request's TraceEvents, in emission order."""
+        if self._engine.trace is None:
+            return []
+        return self._engine.trace.request_events(self._request.rid)
+
+    def breakdown(self):
+        """Latency split (RequestBreakdown) once terminal; None when
+        tracing is off."""
+        if self._engine.trace is None:
+            return None
+        return self._engine.trace.breakdown(self._request.rid)
+
+    def __getattr__(self, name: str):
+        if name.startswith("_"):
+            raise AttributeError(name)
+        return getattr(self._request, name)
+
+    def __repr__(self) -> str:
+        r = self._request
+        return (
+            f"SubmitHandle(rid={r.rid}, state={r.state.name}, "
+            f"out={len(r.output)}/{r.max_new_tokens})"
+        )
+
+
+def build_engine(
+    cfg: ModelConfig, opts: Optional[ServeOptions] = None, params=None, key=None
+):
+    """Build the right engine for ``cfg`` under ``opts``.
+
+    ``opts.engine``: ``"continuous"`` forces the paged engine (raises
+    for families without a paged KV layout), ``"static"`` forces the
+    static batcher, ``"auto"`` (default) picks continuous for
+    :data:`PAGED_FAMILIES` and static otherwise.
+    """
+    opts = opts or ServeOptions()
+    kind = opts.engine
+    if kind == "auto":
+        kind = "continuous" if cfg.family in PAGED_FAMILIES else "static"
+    if kind == "continuous":
+        return ContinuousBatchingEngine(cfg, params=params, key=key, pcfg=opts.paged())
+    if kind == "static":
+        return Engine(cfg, params=params, key=key, prequantize=opts.prequantize)
+    raise ValueError(
+        f"unknown engine kind {opts.engine!r}; use 'auto', 'continuous' or 'static'"
+    )

@@ -39,7 +39,7 @@ import dataclasses
 import time
 from collections import deque
 from functools import partial
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, Iterator, List, Optional
 
 import numpy as np
 import jax
@@ -50,6 +50,12 @@ from repro.models import ModelAPI, build
 from repro.parallel.sharding import paged_pool_spec, param_shardings, use_mesh
 
 from .kv_cache import BlockAllocator, SCRATCH_BLOCK, padded_prompt_len
+from .observability import (
+    MetricsRegistry,
+    TraceRecorder,
+    macs_per_token_by_mode,
+    phase_annotation,
+)
 from .scheduler import Request, RequestState, Scheduler
 
 
@@ -73,6 +79,15 @@ class ServeStats:
     wall-clock entry per engine step (the static engine counts its
     prefill as step 0, then one entry per lockstep decode), so latency
     percentiles compare across engines without attribute guards.
+
+    Since the observability layer, this class is a thin *façade*: the
+    engines wire a :class:`~repro.serving.observability.MetricsRegistry`
+    with live sources over these fields, and once bound (``_registry``)
+    the latency quantiles are computed THROUGH the registry's
+    ``serve_step_latency_seconds`` histogram — same numbers, one code
+    path, and ``serve_bench`` reads the registry instead of reaching
+    into fields.  Unbound instances (constructed standalone) keep the
+    original list-based behavior.
     """
 
     steps: int = 0
@@ -95,6 +110,12 @@ class ServeStats:
     deadline_cancelled: int = 0  # requests cancelled at deadline expiry
     resume_latency_s: List[float] = dataclasses.field(default_factory=list)
     resume_latency_steps: List[int] = dataclasses.field(default_factory=list)
+    # observability binding (engine-managed): once set, quantiles are
+    # computed from the registry's step-latency histogram, whose live
+    # source is this object's own step_latency_s — one source of truth
+    _registry: Optional[MetricsRegistry] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
     def padding_waste(self) -> float:
         """Fraction of engine capacity spent on padding/idle slots."""
@@ -111,6 +132,8 @@ class ServeStats:
         self.step_latency_s.append(seconds)
 
     def latency_quantile(self, q: float) -> float:
+        if self._registry is not None:
+            return self._registry.histogram("serve_step_latency_seconds").quantile(q)
         if not self.step_latency_s:
             return 0.0
         return float(np.quantile(np.asarray(self.step_latency_s), q))
@@ -170,6 +193,23 @@ class Engine:
         self._decode = jax.jit(self.api.decode_step)
         self._enc_cache = None  # encdec: encoder output, fixed per generate()
         self.stats = ServeStats()
+        # same registry surface as the continuous engine (sourced subset:
+        # the static batcher has no pool / scheduler / drafter to sample)
+        self.metrics = MetricsRegistry()
+        for mname, field in (
+            ("serve_steps_total", "steps"),
+            ("serve_prefills_total", "prefills"),
+            ("serve_prefill_tokens_total", "prefill_tokens"),
+            ("serve_decode_steps_total", "decode_steps"),
+            ("serve_generated_tokens_total", "generated_tokens"),
+        ):
+            self.metrics.counter(mname).set_source(
+                lambda field=field: getattr(self.stats, field)
+            )
+        self.metrics.histogram("serve_step_latency_seconds").set_source(
+            lambda: self.stats.step_latency_s
+        )
+        self.stats._registry = self.metrics
 
     def generate(self, prompt_batch: dict, scfg: ServeConfig = ServeConfig()):
         """prompt_batch: family-appropriate prefill inputs (see
@@ -183,6 +223,7 @@ class Engine:
         per step, which would break async dispatch for normal callers).
         """
         self.stats = ServeStats()
+        self.stats._registry = self.metrics
         self._enc_cache = None  # recomputed per generate (frames differ)
         t0 = time.perf_counter()
         logits, caches = self._prefill(self.params, prompt_batch)
@@ -330,6 +371,16 @@ class PagedServeConfig:
     # resume-latency stats; None = time.monotonic.  Tests inject a fake
     # clock to drive Request.deadline_s deterministically.
     clock: Optional[object] = None
+    # observability (see repro.serving.observability).  trace=True (the
+    # default) records one typed TraceEvent per request lifecycle
+    # transition — host-side appends, well under 5% of a step's cost —
+    # exportable as JSON-lines / Chrome trace and the source of the
+    # per-request latency breakdown.  profile=True additionally wraps
+    # each engine phase in a jax.profiler TraceAnnotation so phases
+    # show as named spans in a profiler capture (off by default: it is
+    # only meaningful inside jax.profiler.trace()).
+    trace: bool = True
+    profile: bool = False
 
 
 class ContinuousBatchingEngine:
@@ -487,11 +538,156 @@ class ContinuousBatchingEngine:
         self._step_no = 0
         self._next_rid = 0
         self.stats = ServeStats()
+        # observability: trace recorder (on by default — cheap host-side
+        # appends), metrics registry wired with live sources, opt-in
+        # profiler annotations
+        self._profile = pcfg.profile
+        self.trace: Optional[TraceRecorder] = (
+            TraceRecorder(
+                clock=self._clock,
+                occupancy=lambda: (self.allocator.num_free, self.allocator.num_used),
+            )
+            if pcfg.trace
+            else None
+        )
+        self.metrics = MetricsRegistry()
+        self._wire_metrics()
+        self.stats._registry = self.metrics
 
     @property
     def current_step(self) -> int:
         """Engine step counter (arrival_step values are absolute)."""
         return self._step_no
+
+    def _wire_metrics(self) -> None:
+        """Register every serving metric with a live *source* over
+        engine state — collection reads current values on demand, so
+        the hot path pays nothing and a benchmark-style
+        ``eng.stats = ServeStats()`` reset is reflected automatically.
+        Per-numerics-mode MAC counters resolve each matmul site through
+        ``repro.core.policy`` (PLAM's savings as a serving metric)."""
+        m = self.metrics
+        counters = {
+            "serve_steps_total": ("engine steps run", lambda: self.stats.steps),
+            "serve_prefills_total": (
+                "prefill calls (whole-prompt or chunk)",
+                lambda: self.stats.prefills,
+            ),
+            "serve_prefill_tokens_total": (
+                "real prompt tokens written",
+                lambda: self.stats.prefill_tokens,
+            ),
+            "serve_prefill_padding_total": (
+                "bucket/chunk padding tokens",
+                lambda: self.stats.prefill_padding,
+            ),
+            "serve_decode_steps_total": (
+                "batched decode/verify steps",
+                lambda: self.stats.decode_steps,
+            ),
+            "serve_generated_tokens_total": (
+                "committed output tokens",
+                lambda: self.stats.generated_tokens,
+            ),
+            "serve_drafted_tokens_total": (
+                "speculative tokens drafted",
+                lambda: self.stats.drafted_tokens,
+            ),
+            "serve_accepted_tokens_total": (
+                "speculative tokens accepted",
+                lambda: self.stats.accepted_tokens,
+            ),
+            "serve_preemptions_total": (
+                "running sequences evicted",
+                lambda: self.stats.preemptions,
+            ),
+            "serve_resumes_total": (
+                "recompute-resume re-admissions",
+                lambda: self.stats.resumes,
+            ),
+            "serve_deadline_cancelled_total": (
+                "requests cancelled at deadline",
+                lambda: self.stats.deadline_cancelled,
+            ),
+        }
+        for name, (help_, src) in counters.items():
+            m.counter(name, help_).set_source(src)
+        gauges = {
+            "serve_pool_blocks_free": (
+                "KV pool blocks on the free list",
+                lambda: self.allocator.num_free,
+            ),
+            "serve_pool_blocks_used": (
+                "KV pool blocks owned by live sequences",
+                lambda: self.allocator.num_used,
+            ),
+            "serve_pool_utilization": (
+                "fraction of allocatable KV pool in use",
+                self.allocator.utilization,
+            ),
+            "serve_waiting_requests": (
+                "submitted, not yet admitted",
+                lambda: self.scheduler.num_waiting,
+            ),
+            "serve_preempted_requests": (
+                "parked awaiting recompute-resume",
+                lambda: self.scheduler.num_preempted,
+            ),
+            "serve_running_requests": (
+                "admitted sequences holding a slot",
+                lambda: self.scheduler.num_running,
+            ),
+            "serve_padding_waste": (
+                "capacity fraction lost to padding/idle slots",
+                lambda: self.stats.padding_waste(),
+            ),
+            "serve_spec_acceptance_rate": (
+                "fraction of drafts the target accepted",
+                lambda: self.stats.acceptance_rate(),
+            ),
+            "serve_tokens_per_verify_step": (
+                "committed tokens per verify step per slot",
+                lambda: self.stats.tokens_per_verify_step(),
+            ),
+            "serve_tok_per_s": (
+                "generated tokens over summed step wall time",
+                lambda: (
+                    self.stats.generated_tokens / t
+                    if (t := sum(self.stats.step_latency_s))
+                    else 0.0
+                ),
+            ),
+        }
+        for name, (help_, src) in gauges.items():
+            m.gauge(name, help_).set_source(src)
+        m.histogram(
+            "serve_step_latency_seconds", "wall seconds per engine step"
+        ).set_source(lambda: self.stats.step_latency_s)
+        try:
+            by_mode = macs_per_token_by_mode(self.cfg)
+        except Exception:  # exotic family/policy: MAC attribution is best-effort
+            by_mode = {}
+        for mode, macs in sorted(by_mode.items()):
+            m.counter(
+                "serve_macs_total",
+                "forward-pass MACs by resolved numerics mode",
+                mode=mode,
+            ).set_source(
+                lambda macs=macs: macs
+                * (self.stats.prefill_tokens + self.stats.generated_tokens)
+            )
+        if self.drafter is not None:
+            m.counter(
+                "serve_draft_proposals_total", "drafter propose() calls"
+            ).set_source(lambda: getattr(self.drafter, "proposals", 0))
+            m.counter(
+                "serve_draft_proposed_tokens_total", "tokens proposed by drafter"
+            ).set_source(lambda: getattr(self.drafter, "proposed_tokens", 0))
+
+    def _emit(self, etype: str, rid: int, **payload) -> None:
+        """Trace hook: record one typed event (no-op when tracing off)."""
+        if self.trace is not None:
+            self.trace.emit(etype, rid, self._step_no, **payload)
 
     def _mesh_ctx(self):
         """Context manager activating the engine's mesh (no-op at tp=1)."""
@@ -509,14 +705,19 @@ class ContinuousBatchingEngine:
         stop_token: Optional[int] = None,
         priority: int = 0,
         deadline_s: Optional[float] = None,
-    ) -> Request:
-        """Queue a request; returns the Request handle.  Requests must
+    ) -> "SubmitHandle":
+        """Queue a request; returns a :class:`~repro.serving.api.
+        SubmitHandle` exposing ``.result()`` / ``.cancel()`` /
+        ``.trace()`` and delegating every ``Request`` attribute, so
+        pre-redesign callers keep working unchanged.  Requests must
         be submitted in non-decreasing arrival_step order.  ``priority``
         orders admission and preemption immunity under
         ``preemption="recompute"`` (larger wins; FCFS ignores it);
         ``deadline_s`` is a wall-clock budget from now — an expired
         request is cancelled wherever it is, keeping any output already
         committed."""
+        from .api import SubmitHandle  # local: api imports this module
+
         req = Request(
             rid=self._next_rid,
             prompt=[int(t) for t in prompt],
@@ -529,15 +730,26 @@ class ContinuousBatchingEngine:
         )
         self._next_rid += 1
         self.scheduler.submit(req)
-        return req
+        self._emit(
+            "SUBMIT",
+            req.rid,
+            prompt_len=req.prompt_len,
+            max_new=req.max_new_tokens,
+            priority=req.priority,
+            arrival_step=req.arrival_step,
+        )
+        return SubmitHandle(self, req)
 
-    def cancel(self, req: Request) -> None:
-        """Client-side abort: cancel ``req`` wherever it is (waiting,
-        running, preempted), keeping its committed output.  No-op for
-        already-finished/cancelled requests."""
+    def cancel(self, req) -> None:
+        """Client-side abort: cancel ``req`` (a ``Request`` or a
+        ``SubmitHandle``) wherever it is (waiting, running, preempted),
+        keeping its committed output.  No-op for already-finished/
+        cancelled requests."""
+        req = getattr(req, "request", req)
         if req.state in (RequestState.FINISHED, RequestState.CANCELLED):
             return
         self._cancel(req, self._step_no)
+        self._emit("CANCEL", req.rid, reason="client", out_len=len(req.output))
 
     # -- engine loop -------------------------------------------------------
 
@@ -558,6 +770,12 @@ class ContinuousBatchingEngine:
         for req in self.scheduler.expired(self._clock()):
             self._cancel(req, step)
             self.stats.deadline_cancelled += 1
+            self._emit(
+                "DEADLINE",
+                req.rid,
+                deadline_s=req.deadline_s,
+                out_len=len(req.output),
+            )
             finished.append(req)
 
         for req in self.scheduler.admit(step, on_preempt=self._on_preempt):
@@ -567,7 +785,21 @@ class ContinuousBatchingEngine:
                 self.stats.resume_latency_s.append(
                     self._clock() - req.preempted_time
                 )
+                self._emit(
+                    "RESUME",
+                    req.rid,
+                    slot=req.slot,
+                    blocks=len(req.alloc.blocks),
+                    parked_steps=step - req.preempted_step,
+                )
                 req.preempted_step = -1
+            else:
+                self._emit(
+                    "ADMIT",
+                    req.rid,
+                    slot=req.slot,
+                    blocks=len(req.alloc.blocks),
+                )
             if self.pcfg.prefill_chunk:
                 # blocks + slot reserved; the prompt is fed chunkwise
                 # (the slot stays scratch-masked until prefill is done)
@@ -598,6 +830,13 @@ class ContinuousBatchingEngine:
         self.stats.steps += 1
         self._step_no += 1
         self.stats.record_step(time.perf_counter() - t0)
+        # benchmarks reset counters with `eng.stats = ServeStats()`; the
+        # registry's source callables read `self.stats.<field>` live, so
+        # the swap is already reflected — only the façade's back-pointer
+        # needs refreshing for latency_quantile() to keep routing here.
+        if self.stats._registry is not self.metrics:
+            self.stats._registry = self.metrics
+        self.metrics.tick(self._step_no)
         return finished
 
     def run(self) -> Dict[int, List[int]]:
@@ -608,6 +847,34 @@ class ContinuousBatchingEngine:
             for req in self.step():
                 done[req.rid] = req.output
         return done
+
+    def stream(self, prompt: List[int], **submit_kw) -> Iterator[dict]:
+        """Submit one prompt and drive the engine, yielding incremental
+        progress as dicts: ``{"tokens": [...]}`` for tokens committed
+        since the previous yield, interleaved (in emission order) with
+        ``{"event": TraceEvent}`` for this request's trace events when
+        tracing is on.  Other queued requests keep making progress —
+        stream() drives the shared ``step()`` loop, it does not pin the
+        engine to one request.  Terminates after the request's terminal
+        event (FINISH / CANCEL / DEADLINE)."""
+        handle = self.submit(prompt, **submit_kw)
+        req = handle.request
+        n_tok = 0
+        n_evt = 0
+        if self.trace is not None:
+            for ev in self.trace.request_events(req.rid)[n_evt:]:
+                n_evt += 1
+                yield {"event": ev}
+        while req.state not in (RequestState.FINISHED, RequestState.CANCELLED):
+            self.step()
+            if self.trace is not None:
+                for ev in self.trace.request_events(req.rid)[n_evt:]:
+                    n_evt += 1
+                    yield {"event": ev}
+            if len(req.output) > n_tok:
+                new = req.output[n_tok:]
+                n_tok = len(req.output)
+                yield {"tokens": new}
 
     # -- internals ---------------------------------------------------------
 
@@ -627,7 +894,7 @@ class ContinuousBatchingEngine:
         toks = np.zeros((1, s_pad), np.int32)
         toks[0, :plen] = req.prefill_tokens
         block_ids = jnp.asarray(req.alloc.blocks[: s_pad // bs], jnp.int32)
-        with self._mesh_ctx():
+        with self._mesh_ctx(), phase_annotation("serve.prefill", self._profile):
             logits, (self._k_pool, self._v_pool) = self._prefill(
                 self.params,
                 jnp.asarray(toks),
@@ -643,6 +910,15 @@ class ContinuousBatchingEngine:
         self.stats.prefills += 1
         self.stats.prefill_tokens += plen
         self.stats.prefill_padding += s_pad - plen
+        self._emit(
+            "PREFILL_CHUNK",
+            req.rid,
+            start=0,
+            tokens=plen,
+            width=s_pad,
+            done=True,
+            out_len=len(req.output),
+        )
 
     def _resume_via_chunk(self, req: Request) -> None:
         """Recompute-resume: rewrite the K/V of the committed context
@@ -660,7 +936,7 @@ class ContinuousBatchingEngine:
         table_row = jnp.asarray(
             req.alloc.table_row(self.max_blocks_per_seq), jnp.int32
         )
-        with self._mesh_ctx():
+        with self._mesh_ctx(), phase_annotation("serve.prefill", self._profile):
             logits, (self._k_pool, self._v_pool) = self._prefill_chunk(
                 self.params,
                 jnp.asarray(toks),
@@ -677,6 +953,15 @@ class ContinuousBatchingEngine:
         self.stats.prefills += 1
         self.stats.prefill_tokens += plen
         self.stats.prefill_padding += width - plen
+        self._emit(
+            "PREFILL_CHUNK",
+            req.rid,
+            start=0,
+            tokens=plen,
+            width=width,
+            done=True,
+            out_len=len(req.output),
+        )
 
     def _finish_prefill(self, req: Request, last_logits) -> None:
         """Activate a fully-prefilled slot.  Fresh requests sample
@@ -715,7 +1000,7 @@ class ContinuousBatchingEngine:
         table_row = jnp.asarray(
             req.alloc.table_row(self.max_blocks_per_seq), jnp.int32
         )
-        with self._mesh_ctx():
+        with self._mesh_ctx(), phase_annotation("serve.prefill", self._profile):
             logits, (self._k_pool, self._v_pool) = self._prefill_chunk(
                 self.params,
                 jnp.asarray(toks),
@@ -732,13 +1017,31 @@ class ContinuousBatchingEngine:
         self.stats.prefill_tokens += real
         self.stats.prefill_padding += width - real
         if not req.prefill_done:
+            self._emit(
+                "PREFILL_CHUNK",
+                req.rid,
+                start=start,
+                tokens=real,
+                width=width,
+                done=False,
+                out_len=len(req.output),
+            )
             return False
         self._finish_prefill(req, logits[0, -1])
+        self._emit(
+            "PREFILL_CHUNK",
+            req.rid,
+            start=start,
+            tokens=real,
+            width=width,
+            done=True,
+            out_len=len(req.output),
+        )
         return True
 
     def _do_decode(self, step: int) -> List[Request]:
         token = jnp.asarray(self._last_tok[:, None])
-        with self._mesh_ctx():
+        with self._mesh_ctx(), phase_annotation("serve.decode", self._profile):
             logits, (self._k_pool, self._v_pool) = self._decode(
                 self.params,
                 token,
@@ -766,6 +1069,7 @@ class ContinuousBatchingEngine:
             req.drafted_len = max(req.drafted_len, req.verified_len)
             self._last_tok[slot] = tok
             self.stats.generated_tokens += 1
+            self._emit("DECODE", req.rid, new_tokens=1, out_len=len(req.output))
             if req.is_done():
                 self._release(req, step)
                 finished.append(req)
@@ -795,12 +1099,15 @@ class ContinuousBatchingEngine:
         tokens = np.zeros((m, w), np.int32)
         tokens[:, 0] = self._last_tok
         drafts: Dict[int, List[int]] = {}
+        propose_hist = self.metrics.histogram("serve_draft_propose_seconds")
         for slot, req in active:
+            td = time.perf_counter()
             d = self.drafter.propose(req, k)
+            propose_hist.observe(time.perf_counter() - td)
             assert len(d) == k, (len(d), k)
             drafts[slot] = d
             tokens[slot, 1:] = d
-        with self._mesh_ctx():
+        with self._mesh_ctx(), phase_annotation("serve.verify", self._profile):
             logits, (self._k_pool, self._v_pool) = self._score(
                 self.params,
                 jnp.asarray(tokens),
@@ -837,6 +1144,14 @@ class ContinuousBatchingEngine:
             self._lengths[slot] = base + committed
             self._last_tok[slot] = req.output[-1]
             self.scheduler.rollback(req, base + committed)
+            self._emit(
+                "VERIFY",
+                req.rid,
+                k=k,
+                accepted=a,
+                new_tokens=committed,
+                out_len=len(req.output),
+            )
             if req.is_done():
                 self._release(req, step)
                 finished.append(req)
@@ -859,12 +1174,21 @@ class ContinuousBatchingEngine:
         for req in active:
             if req.state is not RequestState.RUNNING:
                 continue  # evicted by a more deserving grower above
+            before = len(req.alloc.blocks)
             if self.scheduler.grow(
                 req, req.verified_len + w, self._on_preempt, step
             ):
                 self._tables[req.slot] = req.alloc.table_row(
                     self.max_blocks_per_seq
                 )
+                after = len(req.alloc.blocks)
+                if after != before:
+                    self._emit(
+                        "GROW",
+                        req.rid,
+                        new_blocks=after - before,
+                        blocks=after,
+                    )
 
     def _on_preempt(self, req: Request, slot: int, scrub: List[int]) -> None:
         """Scheduler preemption callback: scrub every block the victim
@@ -884,6 +1208,13 @@ class ContinuousBatchingEngine:
             if hook is not None:
                 hook(req)
         self.stats.preemptions += 1
+        self._emit(
+            "PREEMPT",
+            req.rid,
+            blocks_freed=len(scrub),
+            preempt_count=req.preempt_count,
+            out_len=len(req.output),
+        )
 
     def _cancel(self, req: Request, step: int) -> None:
         was_running = req.state is RequestState.RUNNING
@@ -906,6 +1237,7 @@ class ContinuousBatchingEngine:
         self._tables[slot] = SCRATCH_BLOCK
         self._lengths[slot] = 0
         self._last_tok[slot] = 0
+        self._emit("FINISH", req.rid, out_len=len(req.output))
 
     def _scrub(self, blocks: List[int]) -> None:
         """Zero freed blocks that hold written-but-never-committed K/V
@@ -916,7 +1248,7 @@ class ContinuousBatchingEngine:
         airtight against any future mask/length accounting bug."""
         ids = np.full((self.max_blocks_per_seq,), SCRATCH_BLOCK, np.int32)
         ids[: len(blocks)] = blocks
-        with self._mesh_ctx():
+        with self._mesh_ctx(), phase_annotation("serve.scrub", self._profile):
             self._k_pool, self._v_pool = self._scrub_fn(
                 self._k_pool, self._v_pool, jnp.asarray(ids)
             )

@@ -50,6 +50,17 @@ class BlockAllocator:
     def num_free(self) -> int:
         return len(self._free)
 
+    @property
+    def num_used(self) -> int:
+        """Blocks currently owned by live sequences (scratch excluded)."""
+        return self.num_blocks - 1 - len(self._free)
+
+    def utilization(self) -> float:
+        """Fraction of the allocatable pool in use — the occupancy
+        gauge the observability layer samples per event/step."""
+        allocatable = self.num_blocks - 1
+        return self.num_used / allocatable if allocatable else 0.0
+
     def blocks_for(self, n_tokens: int) -> int:
         """Blocks needed to hold n_tokens cache entries."""
         return max(1, -(-n_tokens // self.block_size))

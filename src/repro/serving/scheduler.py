@@ -188,6 +188,21 @@ class Scheduler:
 
     # -- bookkeeping -------------------------------------------------------
 
+    @property
+    def num_waiting(self) -> int:
+        """Queue depth: submitted, not yet admitted (metrics gauge)."""
+        return len(self.waiting)
+
+    @property
+    def num_preempted(self) -> int:
+        """Parked depth: evicted, awaiting recompute-resume."""
+        return len(self.preempted)
+
+    @property
+    def num_running(self) -> int:
+        """Admitted sequences currently holding a decode slot."""
+        return len(self.running)
+
     def submit(self, req: Request) -> None:
         total = req.prompt_len + req.max_new_tokens
         if total > self.max_seq_len:

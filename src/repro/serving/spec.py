@@ -82,8 +82,17 @@ class NgramDrafter:
         assert 1 <= min_n <= max_n, (min_n, max_n)
         self.max_n = max_n
         self.min_n = min_n
+        # observability: the engine's metrics registry reads these live
+        self.proposals = 0
+        self.proposed_tokens = 0
+
+    def describe(self) -> str:
+        """Label for the metrics registry's drafter info gauge."""
+        return f"ngram:{self.max_n}"
 
     def propose(self, req: Request, k: int) -> List[int]:
+        self.proposals += 1
+        self.proposed_tokens += k
         ctx = req.prompt + req.output
         fallback = ctx[-1] if ctx else 0
         for n in range(self.max_n, self.min_n - 1, -1):
@@ -141,11 +150,20 @@ class DraftModelDrafter:
         self.window = window
         self._engine = Engine(draft_cfg, params=params, key=key)
         self._scfg_cls = ServeConfig
+        self._arch = draft_cfg.name
+        self.proposals = 0
+        self.proposed_tokens = 0
+
+    def describe(self) -> str:
+        """Label for the metrics registry's drafter info gauge."""
+        return f"model:{self._arch}(window={self.window})"
 
     def propose(self, req: Request, k: int) -> List[int]:
         import numpy as np
         import jax.numpy as jnp
 
+        self.proposals += 1
+        self.proposed_tokens += k
         ctx = req.prompt + req.output
         w = 1
         while w * 2 <= min(len(ctx), self.window):

@@ -1,0 +1,190 @@
+"""Public serving API tests: options, factory, handles, CLI shims.
+
+Pins the redesigned surface: ``repro.serving.__all__`` is exactly the
+six supported names; ``ServeOptions.from_legacy`` lifts the old config
+classes with a DeprecationWarning and round-trips field-for-field; the
+launcher's deprecated flag spellings emit ONE consolidated warning and
+produce ServeOptions identical to the ``--opt KEY=VAL`` replacement
+(behavioral equivalence of the shim, not just a warning); ``stream()``
+yields exactly the tokens ``run()`` commits, interleaved with
+well-formed events; ``SubmitHandle`` drives/cancels/traces while
+delegating every Request attribute.
+"""
+import warnings
+
+import pytest
+
+import repro.serving as serving
+from repro.configs.base import ModelConfig
+from repro.core.modes import NumericsConfig
+from repro.serving import (
+    ContinuousBatchingEngine,
+    Engine,
+    PagedServeConfig,
+    RequestState,
+    ServeConfig,
+    ServeOptions,
+    SubmitHandle,
+    build_engine,
+)
+from repro.serving.observability import TERMINAL_EVENTS, check_request_events
+
+CFG = ModelConfig(
+    name="api-test", family="dense", n_layers=2, d_model=32, n_heads=2,
+    n_kv=1, head_dim=16, d_ff=64, vocab=64,
+    numerics=NumericsConfig(mode="f32"),
+    act_dtype="float32", param_dtype="float32",
+)
+
+OPTS = ServeOptions(max_new_tokens=4, block_size=4, num_blocks=32,
+                    max_slots=2, max_seq_len=32)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return Engine(CFG).params
+
+
+def test_public_surface_is_exactly_six_names():
+    assert set(serving.__all__) == {
+        "Engine", "ContinuousBatchingEngine", "ServeOptions",
+        "SubmitHandle", "TraceRecorder", "MetricsRegistry",
+    }
+    for name in serving.__all__:
+        assert getattr(serving, name) is not None
+
+
+def test_from_legacy_warns_and_round_trips():
+    pcfg = PagedServeConfig(block_size=8, num_blocks=64, max_slots=3,
+                            spec_k=2, preemption="recompute", trace=False)
+    with pytest.warns(DeprecationWarning):
+        opts = ServeOptions.from_legacy(pcfg)
+    assert opts.engine == "continuous"
+    assert opts.paged() == pcfg  # field-for-field round trip
+
+    scfg = ServeConfig(max_new_tokens=9, temperature=0.5, seed=3,
+                       time_steps=True)
+    with pytest.warns(DeprecationWarning):
+        opts = ServeOptions.from_legacy(scfg, seed=7)  # override applies
+    assert opts.engine == "static"
+    assert opts.static() == ServeConfig(max_new_tokens=9, temperature=0.5,
+                                        seed=7, time_steps=True)
+
+    with pytest.raises(TypeError):
+        ServeOptions.from_legacy(object())
+
+
+def test_legacy_serve_flags_warn_once_and_match_opt_spelling():
+    from repro.launch.serve import make_parser, options_from_args
+
+    base = ["--arch", "yi-6b", "--continuous"]
+    legacy = make_parser().parse_args(
+        base + ["--spec-k", "3", "--preemption", "recompute",
+                "--priority", "2", "--deadline-s", "9.5"])
+    modern = make_parser().parse_args(
+        base + ["--opt", "spec_k=3", "--opt", "preemption=recompute",
+                "--opt", "priority=2", "--opt", "deadline_s=9.5"])
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        legacy_opts = options_from_args(legacy)
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1, "legacy flags must emit ONE consolidated warning"
+    msg = str(dep[0].message)
+    for flag in ("--spec-k", "--preemption", "--priority", "--deadline-s"):
+        assert flag in msg
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        modern_opts = options_from_args(modern)
+    assert not [w for w in caught if issubclass(w.category, DeprecationWarning)]
+
+    # the shim is behavior-identical, not merely tolerated
+    assert legacy_opts == modern_opts
+    assert legacy_opts.spec_k == 3 and legacy_opts.preemption == "recompute"
+    assert legacy_opts.priority == 2 and legacy_opts.deadline_s == 9.5
+
+
+def test_opt_flag_rejects_unknown_keys():
+    from repro.launch.serve import make_parser, options_from_args
+
+    args = make_parser().parse_args(
+        ["--arch", "yi-6b", "--opt", "not_a_field=1"])
+    with pytest.raises(SystemExit):
+        options_from_args(args)
+
+
+def test_build_engine_dispatch(params):
+    eng = build_engine(CFG, OPTS, params=params)
+    assert isinstance(eng, ContinuousBatchingEngine)  # auto: dense -> paged
+    stat = build_engine(
+        CFG, ServeOptions(engine="static"), params=params)
+    assert isinstance(stat, Engine)
+    with pytest.raises(ValueError):
+        build_engine(CFG, ServeOptions(engine="quantum"), params=params)
+
+
+def test_submit_handle_result_trace_and_delegation(params):
+    eng = build_engine(CFG, OPTS, params=params)
+    h = eng.submit([1, 2, 3], max_new_tokens=4)
+    assert isinstance(h, SubmitHandle)
+    # delegation: Request attributes read through the handle
+    assert h.rid == h.request.rid
+    assert h.max_new_tokens == 4
+    assert h.state is RequestState.WAITING
+    out = h.result()
+    assert out == h.request.output and len(out) == 4
+    assert h.state is RequestState.FINISHED
+    evs = h.trace()
+    check_request_events(evs)
+    assert evs[-1].etype == "FINISH"
+    bd = h.breakdown()
+    assert bd.terminal == "FINISH"
+    # result() after finish is a no-op returning the same list
+    assert h.result() == out
+
+
+def test_submit_handle_cancel(params):
+    eng = build_engine(CFG, OPTS, params=params)
+    h = eng.submit([1, 2, 3], max_new_tokens=20)
+    eng.step()
+    h.cancel()
+    assert h.state is RequestState.CANCELLED
+    assert h.trace()[-1].etype == "CANCEL"
+    # engine.cancel also accepts the handle itself (idempotent)
+    eng.cancel(h)
+    assert h.state is RequestState.CANCELLED
+
+
+def test_stream_matches_run(params):
+    ref = build_engine(CFG, OPTS, params=params)
+    expect = ref.submit([9, 8, 7], max_new_tokens=6).result()
+
+    eng = build_engine(CFG, OPTS, params=params)
+    toks, etypes = [], []
+    for item in eng.stream([9, 8, 7], max_new_tokens=6):
+        if "tokens" in item:
+            toks.extend(item["tokens"])
+        else:
+            etypes.append(item["event"].etype)
+    assert toks == expect, "stream() must yield exactly run()'s tokens"
+    assert etypes[0] == "SUBMIT"
+    assert etypes[-1] in TERMINAL_EVENTS
+    assert sum(e in TERMINAL_EVENTS for e in etypes) == 1
+
+
+def test_stats_facade_quantiles_route_through_registry(params):
+    eng = build_engine(CFG, OPTS, params=params)
+    eng.submit([1, 2, 3], max_new_tokens=4).result()
+    assert eng.stats._registry is eng.metrics
+    hist = eng.metrics.histogram("serve_step_latency_seconds")
+    assert eng.stats.latency_p50() == hist.quantile(0.50)
+    assert eng.stats.latency_p95() == hist.quantile(0.95)
+    # a benchmark-style reset rebinds on the next step and keeps the
+    # registry reading the LIVE stats object
+    from repro.serving import ServeStats
+
+    eng.stats = ServeStats()
+    eng.submit([1, 2, 3], max_new_tokens=2).result()
+    assert eng.stats._registry is eng.metrics
+    assert eng.metrics.value("serve_steps_total") == eng.stats.steps

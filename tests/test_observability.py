@@ -1,0 +1,322 @@
+"""Observability-layer tests: event grammar, breakdowns, exporters.
+
+The property test (shim-compatible, tests/_hypothesis_shim.py) drives
+randomized request streams — staggered arrivals, priorities, deadlines,
+mid-run client cancels, speculative bursts and forced pool pressure
+under ``preemption="recompute"`` — through a REAL tiny engine on a fake
+step-counting clock, and asserts every request's event sequence is
+well-formed (SUBMIT first, PREEMPT/RESUME alternating, exactly one
+terminal event) and that the derived queue/prefill/decode/parked
+breakdown sums EXACTLY to the request's submit->terminal wall time.
+
+Structural tests pin the export formats: Chrome trace_event JSON
+(Perfetto-loadable shape), JSON-lines round-trip + the CI schema
+checker, and Prometheus text exposition syntax.
+
+``REPRO_PROP_MULT`` multiplies ``max_examples`` (CI stress runs 10x);
+``REPRO_PROP_SEED`` offsets the derived rng streams.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig
+from repro.core.modes import NumericsConfig
+from repro.serving import (
+    ContinuousBatchingEngine,
+    MetricsRegistry,
+    PagedServeConfig,
+    TraceRecorder,
+)
+from repro.serving.observability import (
+    EVENT_SCHEMA,
+    TERMINAL_EVENTS,
+    TraceEvent,
+    TraceInvariantError,
+    check_prom_file,
+    check_request_events,
+    check_trace_file,
+    load_jsonl,
+    macs_per_token_by_mode,
+    validate_event,
+)
+
+_MULT = int(os.environ.get("REPRO_PROP_MULT", "1"))
+_SEED = int(os.environ.get("REPRO_PROP_SEED", "0"))
+
+CFG = ModelConfig(
+    name="obs-test", family="dense", n_layers=2, d_model=32, n_heads=2,
+    n_kv=1, head_dim=16, d_ff=64, vocab=64,
+    numerics=NumericsConfig(mode="f32"),
+    act_dtype="float32", param_dtype="float32",
+)
+
+# fake clock: the tests advance one "second" per engine step, so every
+# breakdown below is deterministic in step units
+_CLOCK = {"t": 0.0}
+
+# engines are cached per configuration so XLA compiles amortize across
+# hypothesis examples (each engine keeps its own jit cache)
+_ENGINES = {}
+
+
+def _engine(preemption="off", spec_k=0, prefill_chunk=0):
+    key = (preemption, spec_k, prefill_chunk)
+    if key not in _ENGINES:
+        _ENGINES[key] = ContinuousBatchingEngine(
+            CFG,
+            pcfg=PagedServeConfig(
+                block_size=4,
+                num_blocks=16 if preemption == "recompute" else 64,
+                max_slots=2, max_seq_len=48,
+                spec_k=spec_k, prefill_chunk=prefill_chunk,
+                preemption=preemption,
+                clock=lambda: _CLOCK["t"],
+            ),
+        )
+    return _ENGINES[key]
+
+
+# -- event-sequence property ------------------------------------------------
+
+
+@settings(max_examples=6 * _MULT, deadline=None)
+@given(st.integers(0, 10**9))
+def test_event_streams_well_formed(seed):
+    rng = np.random.default_rng(_SEED * 7919 + seed)
+    preemption = "recompute" if rng.integers(2) else "off"
+    spec_k = 2 if rng.integers(2) else 0
+    chunk = 4 if (spec_k == 0 and rng.integers(2)) else 0
+    eng = _engine(preemption, spec_k, chunk)
+    eng.trace.clear()  # engine is reused; examples assert on own events
+    base = eng.current_step
+    handles = []
+    for _ in range(int(rng.integers(2, 5))):
+        plen = int(rng.choice([3, 6, 11]))
+        handles.append(eng.submit(
+            rng.integers(0, CFG.vocab, plen).tolist(),
+            max_new_tokens=int(rng.integers(2, 8)),
+            arrival_step=base + int(rng.integers(0, 3)),
+            priority=int(rng.integers(0, 2)),
+            deadline_s=float(rng.integers(4, 40)) if rng.integers(2) else None,
+        ))
+    steps = 0
+    while eng.scheduler.has_work():
+        eng.step()
+        _CLOCK["t"] += 1.0
+        steps += 1
+        if steps == 3 and rng.integers(2):
+            eng.cancel(handles[0])
+        assert steps < 500, "engine did not drain"
+
+    eng.trace.validate()  # recorder-level grammar check over every rid
+    for h in handles:
+        evs = h.trace()
+        check_request_events(evs)
+        assert evs[0].etype == "SUBMIT"
+        assert sum(e.etype in TERMINAL_EVENTS for e in evs) == 1
+        assert evs[-1].etype in TERMINAL_EVENTS
+        pr = [e.etype for e in evs if e.etype in ("PREEMPT", "RESUME")]
+        assert pr[::2] == ["PREEMPT"] * len(pr[::2])
+        assert pr[1::2] == ["RESUME"] * len(pr[1::2])
+        # the telescoping breakdown covers the lifetime exactly: the
+        # phase buckets sum to submit->terminal wall time, no residue
+        bd = h.breakdown()
+        total = bd.queue_s + bd.prefill_s + bd.decode_s + bd.parked_s
+        assert total == pytest.approx(bd.total_s, abs=1e-9)
+        assert bd.total_s == pytest.approx(evs[-1].t - evs[0].t, abs=1e-9)
+        if bd.terminal == "FINISH" and h.output:
+            assert bd.first_token_s is not None
+            assert 0.0 <= bd.first_token_s <= bd.total_s
+
+
+# -- schema / grammar rejection ---------------------------------------------
+
+
+def test_schema_rejects_malformed_events():
+    with pytest.raises(TraceInvariantError):
+        validate_event(TraceEvent("NOT_A_TYPE", 0, 0, 0.0, {"out_len": 0}))
+    with pytest.raises(TraceInvariantError):  # missing out_len
+        validate_event(TraceEvent("DECODE", 0, 0, 0.0, {"new_tokens": 1}))
+    validate_event(TraceEvent("DECODE", 0, 0, 0.0,
+                              {"new_tokens": 1, "out_len": 3}))  # ok
+    # extra keys (occupancy stamps etc.) are allowed
+    validate_event(TraceEvent("FINISH", 0, 0, 0.0,
+                              {"out_len": 3, "free_blocks": 9}))
+
+
+def test_grammar_rejects_malformed_sequences():
+    sub = TraceEvent("SUBMIT", 0, 0, 0.0, {"prompt_len": 4, "max_new": 4})
+    adm = TraceEvent("ADMIT", 0, 1, 1.0, {"slot": 0, "blocks": 1})
+    fin = TraceEvent("FINISH", 0, 3, 3.0, {"out_len": 4})
+    res = TraceEvent("RESUME", 0, 2, 2.0,
+                     {"slot": 0, "blocks": 1, "parked_steps": 1})
+    check_request_events([sub, adm, fin])  # baseline is legal
+    with pytest.raises(TraceInvariantError):
+        check_request_events([adm, fin])  # ADMIT before SUBMIT
+    with pytest.raises(TraceInvariantError):
+        check_request_events([sub, adm, fin, fin])  # two terminals
+    with pytest.raises(TraceInvariantError):
+        check_request_events([sub, adm, res, fin])  # RESUME without PREEMPT
+    with pytest.raises(TraceInvariantError):
+        # timestamps must be non-decreasing
+        check_request_events([
+            sub,
+            TraceEvent("ADMIT", 0, 1, -1.0, {"slot": 0, "blocks": 1}),
+            fin,
+        ])
+
+
+# -- exporters ---------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def traced_run():
+    eng = _engine()
+    eng.trace.clear()
+    hs = [eng.submit([1, 2, 3], max_new_tokens=4),
+          eng.submit([4, 5, 6, 7, 8, 9], max_new_tokens=3)]
+    while eng.scheduler.has_work():
+        eng.step()
+        _CLOCK["t"] += 1.0
+    return eng, hs
+
+
+def test_chrome_trace_structure(tmp_path, traced_run):
+    eng, _ = traced_run
+    path = tmp_path / "trace.json"
+    eng.trace.to_chrome_trace(str(path))
+    doc = json.loads(path.read_text())
+    evs = doc["traceEvents"]
+    assert isinstance(evs, list) and evs
+    # Perfetto essentials: complete slices carry ts+dur, instants carry
+    # a scope, metadata names the per-request tracks
+    kinds = {e["ph"] for e in evs}
+    assert {"X", "i", "M"} <= kinds
+    for e in evs:
+        assert {"ph", "pid", "tid", "name"} <= set(e)
+        if e["ph"] == "X":
+            assert e["dur"] >= 0 and e["ts"] >= 0
+        if e["ph"] == "i":
+            assert e["s"] in ("t", "p", "g")
+        if e["ph"] == "M":
+            assert e["name"] == "thread_name"
+    rids = {h.rid for h in traced_run[1]}
+    assert {e["tid"] for e in evs if e["ph"] == "X"} <= rids
+
+
+def test_jsonl_roundtrip_and_schema_checker(tmp_path, traced_run):
+    eng, hs = traced_run
+    path = tmp_path / "trace.jsonl"
+    eng.trace.to_jsonl(str(path))
+    loaded = load_jsonl(str(path))
+    assert [e.to_dict() for e in loaded] == [
+        e.to_dict() for e in eng.trace.events]
+    counts = check_trace_file(str(path))
+    assert counts["requests"] == len(hs)
+    assert counts["terminal"] == len(hs)
+
+
+def test_prometheus_text_syntax(tmp_path, traced_run):
+    eng, _ = traced_run
+    text = eng.metrics.to_prometheus_text()
+    path = tmp_path / "metrics.prom"
+    path.write_text(text)
+    n = check_prom_file(str(path))  # raises on any malformed line
+    assert n > 0
+    assert "# TYPE serve_step_latency_seconds histogram" in text
+    assert 'le="+Inf"' in text
+    # live-sourced counters reflect engine state at scrape time
+    assert eng.metrics.value("serve_steps_total") == eng.stats.steps
+
+
+def test_latency_summary_sane(traced_run):
+    eng, hs = traced_run
+    s = eng.trace.latency_summary()
+    assert s["requests"] == len(hs)
+    # the fake clock ticks once per engine step, so a request whose
+    # admit+prefill landed inside the submit step has ttft exactly 0.0
+    assert 0.0 <= s["first_token_p50_s"] <= s["total_p95_s"]
+    assert s["total_p95_s"] > 0.0
+    assert s["total_p50_s"] <= s["total_p95_s"]
+    for h in hs:
+        ttft, total = eng.trace.latency(h.rid)
+        assert 0.0 <= ttft <= total
+
+
+# -- metrics registry --------------------------------------------------------
+
+
+def test_registry_instruments_and_labels():
+    reg = MetricsRegistry()
+    reg.counter("c", "help text").inc()
+    reg.counter("c").inc(2)
+    assert reg.value("c") == 3.0
+    with pytest.raises(AssertionError):
+        reg.counter("c").inc(-1)
+    reg.gauge("g", mode="plam").set(0.5)
+    reg.gauge("g", mode="f32").set(0.25)
+    assert reg.value("g", mode="plam") == 0.5
+    assert reg.value("g", mode="f32") == 0.25
+    h = reg.histogram("h")
+    for v in (0.001, 0.002, 0.003, 0.4):
+        h.observe(v)
+    assert h.count == 4
+    assert h.quantile(0.5) == pytest.approx(0.0025)
+    text = reg.to_prometheus_text()
+    assert '# HELP c help text' in text
+    assert 'g{mode="plam"} 0.5' in text
+    assert 'h_count 4' in text
+
+
+def test_registry_sources_and_snapshot_hooks():
+    reg = MetricsRegistry()
+    box = {"v": 1.0, "xs": [0.1]}
+    reg.counter("src_total").set_source(lambda: box["v"])
+    reg.histogram("src_hist").set_source(lambda: box["xs"])
+    with pytest.raises(AssertionError):
+        reg.counter("src_total").inc()  # sourced instruments are read-only
+    box["v"] = 7.0
+    box["xs"].append(0.3)
+    assert reg.value("src_total") == 7.0
+    assert reg.histogram("src_hist").count == 2
+    fired = []
+    reg.every(5, lambda r: fired.append(r.value("src_total")))
+    for step in range(1, 11):
+        reg.tick(step)
+    assert fired == [7.0, 7.0]  # steps 5 and 10
+    snap = reg.snapshot()
+    assert snap["src_total"] == 7.0
+    assert snap["src_hist"]["count"] == 2
+
+
+def test_macs_by_mode_attribution():
+    plam_cfg = CFG.with_numerics(NumericsConfig(mode="plam_sim", n=16, es=1))
+    macs = macs_per_token_by_mode(plam_cfg)
+    assert set(macs) == {"plam_sim:16:1"}
+    from repro.numerics.calibrate import site_macs
+
+    assert macs["plam_sim:16:1"] == pytest.approx(
+        sum(site_macs(plam_cfg).values()))
+    # a split policy attributes per resolved site mode
+    from repro.core.policy import parse_policy
+
+    split = CFG.with_numerics(
+        parse_policy("default=plam_sim:16:1, lm_head=f32"))
+    split_macs = macs_per_token_by_mode(split)
+    assert set(split_macs) == {"plam_sim:16:1", "f32"}
+    assert sum(split_macs.values()) == pytest.approx(
+        sum(site_macs(split).values()))
+
+
+def test_engine_exports_mode_mac_counters(traced_run):
+    eng, _ = traced_run
+    text = eng.metrics.to_prometheus_text()
+    assert 'serve_macs_total{mode="f32"}' in text
+    generated = eng.stats.prefill_tokens + eng.stats.generated_tokens
+    per_tok = macs_per_token_by_mode(CFG)["f32"]
+    assert eng.metrics.value("serve_macs_total", mode="f32") == (
+        pytest.approx(per_tok * generated))
