@@ -22,7 +22,10 @@ CI exercises the sharded engine.
 
 Engine options beyond those first-class flags are spelled ``--opt
 KEY=VAL`` (repeatable), with KEY any ``repro.serving.ServeOptions``
-field — e.g. ``--opt spec_k=4 --opt preemption=recompute``.  The old
+field — e.g. ``--opt spec_k=4 --opt preemption=recompute`` or ``--opt
+prefix_cache=true`` (content-addressed KV reuse across requests that
+share a prompt prefix; the summary line then reports the block
+hit/miss counts and prompt tokens skipped).  The old
 split spellings (``--numerics``, ``--spec-k``, ``--spec-draft``,
 ``--preemption``, ``--priority``, ``--deadline-s``) still work but are
 deprecated: using any of them emits ONE consolidated
@@ -246,6 +249,11 @@ def main():
             spec += (f" preemptions={eng.stats.preemptions}"
                      f" resumes={eng.stats.resumes}"
                      f" deadline_cancelled={eng.stats.deadline_cancelled}")
+        if opts.prefix_cache:
+            al = eng.allocator
+            spec += (f" prefix_hits={al.hits} prefix_misses={al.misses}"
+                     f" prefill_tokens_saved={al.tokens_saved}"
+                     f" prefix_evictions={al.evictions}")
         print(f"arch={cfg.name} numerics={numerics_label!r} engine=continuous "
               f"tp={opts.tp} prefill_chunk={opts.prefill_chunk} "
               f"steps={eng.stats.steps} pad_waste={eng.stats.padding_waste():.1%} "

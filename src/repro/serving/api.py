@@ -89,6 +89,7 @@ class ServeOptions:
     spec_k: int = 0
     spec_draft: object = "ngram"
     preemption: str = "off"
+    prefix_cache: bool = False  # content-addressed KV reuse across requests
     clock: Optional[object] = None
 
     # -- observability -----------------------------------------------------
@@ -113,6 +114,7 @@ class ServeOptions:
             spec_k=self.spec_k,
             spec_draft=self.spec_draft,
             preemption=self.preemption,
+            prefix_cache=self.prefix_cache,
             clock=self.clock,
             trace=self.trace,
             profile=self.profile,

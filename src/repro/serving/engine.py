@@ -367,6 +367,16 @@ class PagedServeConfig:
     # chunked-prefill path; resumed streams are greedy-token-identical
     # to uninterrupted runs.
     preemption: str = "off"
+    # content-addressed prefix caching over the paged pool (opt-in).
+    # Admission walks the prompt's full blocks through a chain-hash map
+    # (hash(parent_hash, block_tokens)) kept by the BlockAllocator,
+    # reuses every leading hit (refcount++) and prefills only the miss
+    # suffix through the chunked-prefill path; freed registered blocks
+    # park on an LRU and are evicted (scrubbed, then freed) only under
+    # pool pressure.  Greedy streams are token-identical with the cache
+    # on or off — K/V at a position is a deterministic function of the
+    # token prefix, which is exactly what the chain hash keys.
+    prefix_cache: bool = False
     # injectable wall clock (monotonic seconds) for deadline expiry and
     # resume-latency stats; None = time.monotonic.  Tests inject a fake
     # clock to drive Request.deadline_s deterministically.
@@ -435,6 +445,11 @@ class ContinuousBatchingEngine:
             )
         if pcfg.prefill_chunk and self.api.paged_prefill_chunk is None:
             raise ValueError(f"family {cfg.family!r} has no chunked prefill path")
+        if pcfg.prefix_cache and self.api.paged_prefill_chunk is None:
+            raise ValueError(
+                f"family {cfg.family!r} has no chunked prefill path; "
+                "prefix caching needs it to prefill the cache-miss suffix"
+            )
         if pcfg.spec_k:
             if pcfg.temperature > 0:
                 raise ValueError(
@@ -484,7 +499,7 @@ class ContinuousBatchingEngine:
             pool_sharding = paged_pool_spec(self._mesh, self._k_pool.shape)
             self._k_pool = jax.device_put(self._k_pool, pool_sharding)
             self._v_pool = jax.device_put(self._v_pool, pool_sharding)
-        self.allocator = BlockAllocator(nb, bs)
+        self.allocator = BlockAllocator(nb, bs, prefix_cache=pcfg.prefix_cache)
         self._clock = pcfg.clock if pcfg.clock is not None else time.monotonic
         self.scheduler = Scheduler(
             self.allocator,
@@ -527,6 +542,19 @@ class ContinuousBatchingEngine:
         scrub_donate = (0, 1) if jax.default_backend() != "cpu" else ()
         self._scrub_fn = jax.jit(
             lambda kp, vp, ids: (kp.at[:, ids].set(0), vp.at[:, ids].set(0)),
+            donate_argnums=scrub_donate,
+        )
+        # blocks freed this step but not yet zeroed: scrubs coalesce
+        # into one padded scatter per flush (see _flush_scrubs) instead
+        # of one dispatch per retire/preempt/evict event
+        self._scrub_pending: List[int] = []
+        # copy-on-write: duplicate one pool block (all layers) into a
+        # private block before a sequence writes into a shared tail
+        self._cow_fn = jax.jit(
+            lambda kp, vp, src, dst: (
+                kp.at[:, dst].set(kp[:, src]),
+                vp.at[:, dst].set(vp[:, src]),
+            ),
             donate_argnums=scrub_donate,
         )
 
@@ -609,6 +637,26 @@ class ContinuousBatchingEngine:
                 "requests cancelled at deadline",
                 lambda: self.stats.deadline_cancelled,
             ),
+            "serve_prefix_cache_hits_total": (
+                "prefix-cache block hits at admission",
+                lambda: self.allocator.hits,
+            ),
+            "serve_prefix_cache_misses_total": (
+                "prefix-cache block misses at admission",
+                lambda: self.allocator.misses,
+            ),
+            "serve_prefix_cache_evictions_total": (
+                "idle cached blocks reclaimed under pool pressure",
+                lambda: self.allocator.evictions,
+            ),
+            "serve_prefill_tokens_saved_total": (
+                "prompt tokens skipped via prefix-cache hits",
+                lambda: self.allocator.tokens_saved,
+            ),
+            "serve_prefix_cache_cow_total": (
+                "copy-on-write block duplications",
+                lambda: self.allocator.cow_copies,
+            ),
         }
         for name, (help_, src) in counters.items():
             m.counter(name, help_).set_source(src)
@@ -624,6 +672,10 @@ class ContinuousBatchingEngine:
             "serve_pool_utilization": (
                 "fraction of allocatable KV pool in use",
                 self.allocator.utilization,
+            ),
+            "serve_prefix_cached_blocks": (
+                "pool blocks holding registered prefix-cache content",
+                lambda: self.allocator.num_cached,
             ),
             "serve_waiting_requests": (
                 "submitted, not yet admitted",
@@ -791,6 +843,7 @@ class ContinuousBatchingEngine:
                     slot=req.slot,
                     blocks=len(req.alloc.blocks),
                     parked_steps=step - req.preempted_step,
+                    cached_len=req.cached_len,
                 )
                 req.preempted_step = -1
             else:
@@ -799,6 +852,7 @@ class ContinuousBatchingEngine:
                     req.rid,
                     slot=req.slot,
                     blocks=len(req.alloc.blocks),
+                    cached_len=req.cached_len,
                 )
             if self.pcfg.prefill_chunk:
                 # blocks + slot reserved; the prompt is fed chunkwise
@@ -826,6 +880,12 @@ class ContinuousBatchingEngine:
                 finished.extend(self._do_verify(step))
             else:
                 finished.extend(self._do_decode(step))
+
+        # drain any scrub work this step produced after its last
+        # compute call (retires, cancels, deadline sweeps on an
+        # otherwise-idle step) so freed blocks never stay dirty across
+        # a step boundary
+        self._flush_scrubs()
 
         self.stats.steps += 1
         self._step_no += 1
@@ -884,10 +944,15 @@ class ContinuousBatchingEngine:
         routes through the chunked-prefill gather->attend->scatter path
         (one whole-width chunk) when the family has one: it is pinned
         bit-identical to monolithic prefill and shares its compiles
-        with chunked serving."""
-        if req.resume_ctx is not None and self._prefill_chunk is not None:
+        with chunked serving.  A prefix-cache hit (``prefill_pos > 0``
+        set by admission) takes the same route: only the miss suffix is
+        written, over the shared blocks as attended context."""
+        if (
+            req.resume_ctx is not None or req.prefill_pos > 0
+        ) and self._prefill_chunk is not None:
             self._resume_via_chunk(req)
             return
+        self._flush_scrubs()
         bs = self.pcfg.block_size
         plen = req.prefill_len
         s_pad = padded_prompt_len(plen, bs)
@@ -927,12 +992,24 @@ class ContinuousBatchingEngine:
         next token after the context is the already-committed last
         output token, re-fed by the normal decode step — so resume only
         has to reproduce the K/V, which the chunk path does
-        bit-identically to an uninterrupted run."""
+        bit-identically to an uninterrupted run.
+
+        With prefix caching the same path prefills only the cache-MISS
+        suffix: ``prefill_pos`` starts at the cached boundary (set by
+        admission), the chunk's ``cache_len`` is that boundary, and the
+        hit blocks are attended over exactly as committed context is on
+        a resume.  ``start == 0`` reproduces the historical resume call
+        bit-for-bit."""
+        if req.cow_src is not None:
+            self._apply_cow(req)
+        self._flush_scrubs()
         bs = self.pcfg.block_size
         plen = req.prefill_len
-        width = padded_prompt_len(plen, bs)
+        start = req.prefill_pos
+        remaining = plen - start
+        width = padded_prompt_len(remaining, bs)
         toks = np.zeros((1, width), np.int32)
-        toks[0, :plen] = req.prefill_tokens
+        toks[0, :remaining] = req.prefill_tokens[start:]
         table_row = jnp.asarray(
             req.alloc.table_row(self.max_blocks_per_seq), jnp.int32
         )
@@ -943,21 +1020,25 @@ class ContinuousBatchingEngine:
                 self._k_pool,
                 self._v_pool,
                 table_row,
-                jnp.int32(0),
-                jnp.int32(plen - 1),
+                jnp.int32(start),
+                jnp.int32(remaining - 1),
             )
         req.prefill_pos = plen
         req.verified_len = plen
-        req.drafted_len = width
+        # suffix padding past capacity lands on the scratch block via
+        # the padded table row; only in-capacity positions can be dirty
+        req.drafted_len = max(
+            req.drafted_len, min(start + width, req.alloc.capacity())
+        )
         self._finish_prefill(req, logits[0, -1])
         self.stats.prefills += 1
-        self.stats.prefill_tokens += plen
-        self.stats.prefill_padding += width - plen
+        self.stats.prefill_tokens += remaining
+        self.stats.prefill_padding += width - remaining
         self._emit(
             "PREFILL_CHUNK",
             req.rid,
-            start=0,
-            tokens=plen,
+            start=start,
+            tokens=remaining,
             width=width,
             done=True,
             out_len=len(req.output),
@@ -979,6 +1060,10 @@ class ContinuousBatchingEngine:
         self._tables[slot] = req.alloc.table_row(self.max_blocks_per_seq)
         self._lengths[slot] = req.prefill_len
         self._last_tok[slot] = tok
+        if self.allocator.prefix_cache:
+            # publish only now that the K/V is really in the pool — a
+            # hash->block mapping must never race ahead of pool content
+            self.allocator.register(req.prefill_tokens, req.alloc.blocks)
 
     def _do_prefill_chunk(self, req: Request) -> bool:
         """Write ONE chunk of `req`'s prompt into its pool blocks.
@@ -990,6 +1075,9 @@ class ContinuousBatchingEngine:
         compile per distinct residue bucket — same trade as the
         whole-prompt buckets).
         """
+        if req.cow_src is not None:
+            self._apply_cow(req)
+        self._flush_scrubs()
         bs, chunk = self.pcfg.block_size, self.pcfg.prefill_chunk
         start = req.prefill_pos
         remaining = req.prefill_len - start
@@ -1012,7 +1100,11 @@ class ContinuousBatchingEngine:
             )
         req.prefill_pos = start + real
         req.verified_len = start + real
-        req.drafted_len = max(req.drafted_len, start + width)
+        # chunk padding past capacity is absorbed by the scratch block
+        # (padded table row) — only in-capacity positions can be dirty
+        req.drafted_len = max(
+            req.drafted_len, min(start + width, req.alloc.capacity())
+        )
         self.stats.prefills += 1
         self.stats.prefill_tokens += real
         self.stats.prefill_padding += width - real
@@ -1040,6 +1132,7 @@ class ContinuousBatchingEngine:
         return True
 
     def _do_decode(self, step: int) -> List[Request]:
+        self._flush_scrubs()
         token = jnp.asarray(self._last_tok[:, None])
         with self._mesh_ctx(), phase_annotation("serve.decode", self._profile):
             logits, (self._k_pool, self._v_pool) = self._decode(
@@ -1088,6 +1181,7 @@ class ContinuousBatchingEngine:
         one-token decode would have produced, so spec_k only changes
         throughput, never the stream.
         """
+        self._flush_scrubs()
         k = self.pcfg.spec_k
         w = k + 1
         m = self.pcfg.max_slots
@@ -1240,18 +1334,55 @@ class ContinuousBatchingEngine:
         self._emit("FINISH", req.rid, out_len=len(req.output))
 
     def _scrub(self, blocks: List[int]) -> None:
-        """Zero freed blocks that hold written-but-never-committed K/V
-        (rolled-back speculative tails, prefill padding) so a future
-        owner can never attend over a previous sequence's stale keys —
-        the length masks make such reads unreachable today, but the
-        free list is the trust boundary and scrubbed blocks keep it
-        airtight against any future mask/length accounting bug."""
-        ids = np.full((self.max_blocks_per_seq,), SCRATCH_BLOCK, np.int32)
+        """Queue freed blocks that hold written-but-never-committed K/V
+        (rolled-back speculative tails, prefill padding) for zeroing,
+        so a future owner can never attend over a previous sequence's
+        stale keys — the length masks make such reads unreachable
+        today, but the free list is the trust boundary and scrubbed
+        blocks keep it airtight against any future mask/length
+        accounting bug.  Queued blocks are zeroed in one batched
+        scatter (:meth:`_flush_scrubs`) before the next pool write:
+        every compute helper flushes first, so a queued block can never
+        be reallocated *and written* ahead of its scrub."""
+        self._scrub_pending.extend(blocks)
+
+    def _flush_scrubs(self) -> None:
+        """Zero every pending freed block — retires, preempts, cancels,
+        spec rollbacks and prefix-cache evictions accumulated since the
+        last flush — in ONE padded scatter call, instead of one jitted
+        dispatch per event.  The id row is padded with the scratch
+        block to the next multiple of max_blocks_per_seq so flushes
+        share a handful of compiles (re-zeroing scratch is harmless)."""
+        self._scrub_pending.extend(self.allocator.drain_evicted())
+        if not self._scrub_pending:
+            return
+        blocks, self._scrub_pending = self._scrub_pending, []
+        w = self.max_blocks_per_seq
+        n = -(-len(blocks) // w) * w
+        ids = np.full((n,), SCRATCH_BLOCK, np.int32)
         ids[: len(blocks)] = blocks
         with self._mesh_ctx(), phase_annotation("serve.scrub", self._profile):
             self._k_pool, self._v_pool = self._scrub_fn(
                 self._k_pool, self._v_pool, jnp.asarray(ids)
             )
+
+    def _apply_cow(self, req: Request) -> None:
+        """Copy-on-write before a shared tail block absorbs writes: the
+        one cache-hit block this sequence must write into (a fully-hit
+        block whose last token is recomputed for logits — ``cached_len``
+        was capped mid-block) is duplicated into the private block
+        allocated in its place, then the pin on the shared source is
+        dropped.  Runs before the suffix prefill touches the pool."""
+        src = req.cow_src
+        assert src is not None
+        self._flush_scrubs()
+        dst = req.alloc.blocks[req.cached_len // self.pcfg.block_size]
+        with self._mesh_ctx(), phase_annotation("serve.cow", self._profile):
+            self._k_pool, self._v_pool = self._cow_fn(
+                self._k_pool, self._v_pool, jnp.int32(src), jnp.int32(dst)
+            )
+        req.cow_src = None
+        self._scrub(self.allocator.release([src]))
 
     def _pick_one(self, logits_row, req: Request, token_idx: int):
         if self.pcfg.temperature <= 0:

@@ -59,7 +59,7 @@ import numpy as np
 #: missing keys, so traces validate at the source, not in CI.
 EVENT_SCHEMA: Dict[str, Tuple[str, ...]] = {
     "SUBMIT": ("prompt_len", "max_new"),
-    "ADMIT": ("slot", "blocks"),
+    "ADMIT": ("slot", "blocks", "cached_len"),
     "PREFILL_CHUNK": ("start", "tokens", "width", "done", "out_len"),
     "DECODE": ("new_tokens", "out_len"),
     "VERIFY": ("k", "accepted", "new_tokens", "out_len"),
@@ -737,12 +737,27 @@ def check_trace_file(path: str) -> Dict[str, int]:
     return {"events": len(events), "requests": len(by_rid), "terminal": checked}
 
 
+#: Metric families a serving-engine export must always carry: the
+#: engine registers the prefix-cache counters unconditionally (they
+#: simply stay at 0 with the cache off), so their absence from a file
+#: that has any ``serve_`` family means the export predates the cache
+#: or dropped families on the way out.
+_REQUIRED_SERVE_FAMILIES: Tuple[str, ...] = (
+    "serve_prefix_cache_hits_total",
+    "serve_prefix_cache_misses_total",
+    "serve_prefix_cache_evictions_total",
+)
+
+
 def check_prom_file(path: str) -> int:
-    """Syntax-check a Prometheus text file; returns sample line count."""
+    """Syntax-check a Prometheus text file; returns sample line count.
+    Files containing serving-engine metrics must also carry the
+    prefix-cache families (see :data:`_REQUIRED_SERVE_FAMILIES`)."""
     import re
 
     pat = re.compile(_PROM_LINE)
     samples = 0
+    families = set()
     with open(path) as f:
         for line_no, line in enumerate(f, 1):
             line = line.rstrip("\n")
@@ -752,6 +767,13 @@ def check_prom_file(path: str) -> int:
                 raise TraceInvariantError(f"{path}:{line_no}: bad prom line {line!r}")
             if not line.startswith("#"):
                 samples += 1
+                families.add(line.split("{", 1)[0].split(" ", 1)[0])
+    if any(f.startswith("serve_") for f in families):
+        missing = [f for f in _REQUIRED_SERVE_FAMILIES if f not in families]
+        if missing:
+            raise TraceInvariantError(
+                f"{path}: serving export missing metric families {missing}"
+            )
     return samples
 
 

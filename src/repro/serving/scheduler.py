@@ -111,6 +111,17 @@ class Request:
     preempt_count: int = 0
     preempted_step: int = -1
     preempted_time: float = 0.0
+    # prefix-cache bookkeeping.  cached_len counts the leading prefill
+    # positions served from the content-addressed cache at the last
+    # activation (prefill starts there instead of 0).  cow_src, when
+    # set, names a SHARED cached block whose content the engine must
+    # copy into this sequence's private tail block before prefill — the
+    # copy-on-write case: a fully-cached block-aligned context still
+    # recomputes its final token, and that write may not land in a
+    # block other sequences reference.  The scheduler pins cow_src with
+    # a reference until the engine copies (or the request is torn down).
+    cached_len: int = 0
+    cow_src: Optional[int] = None
 
     @property
     def prompt_len(self) -> int:
@@ -284,9 +295,14 @@ class Scheduler:
         return min(victims, key=self.deserving, default=None)
 
     def _freeable_below(self, beneficiary: Request) -> int:
+        """Blocks that would become allocatable (freed or parked on the
+        evictable cache LRU) by preempting every running request
+        strictly less deserving than ``beneficiary``.  Shared blocks
+        (refcount > 1) are conservatively excluded: releasing one
+        victim's reference leaves them referenced."""
         bkey = self.deserving(beneficiary)
         return sum(
-            len(r.alloc.blocks)
+            sum(1 for b in r.alloc.blocks if self.allocator.refcount(b) <= 1)
             for r in self.running.values()
             if self.deserving(r) < bkey
         )
@@ -326,7 +342,7 @@ class Scheduler:
             if not self.allocator.can_allocate(need):
                 break
             self.waiting.popleft()
-            self._activate(req, self.allocator.allocate(need), step)
+            self._activate(req, need, step)
             admitted.append(req)
         return admitted
 
@@ -343,10 +359,10 @@ class Scheduler:
         for req in candidates:
             need = self.blocks_initial(req)
             need_slot = not self._free_slots
-            short = need - self.allocator.num_free
+            short = need - self.allocator.num_available
             if not need_slot and short <= 0:
                 self._dequeue_pending(req)
-                self._activate(req, self.allocator.allocate(need), step)
+                self._activate(req, need, step)
                 admitted.append(req)
                 continue
             # feasibility before any eviction: every strictly-less-
@@ -364,7 +380,7 @@ class Scheduler:
                 self.preempt(victim, step, on_preempt)
                 preempted_any = True
             self._dequeue_pending(req)
-            self._activate(req, self.allocator.allocate(need), step)
+            self._activate(req, need, step)
             admitted.append(req)
             if preempted_any:
                 break  # let evictions settle before admitting anyone else
@@ -376,12 +392,76 @@ class Scheduler:
         else:
             self.waiting.remove(req)
 
-    def _activate(self, req: Request, blocks: List[int], step: int) -> None:
-        req.alloc = SequenceAllocation(blocks, self.allocator.block_size)
+    def _activate(self, req: Request, need: int, step: int) -> None:
+        """Give ``req`` a slot and ``need`` blocks.  With prefix
+        caching on, the leading full blocks of the prefill context are
+        served from the content-addressed cache instead of allocated:
+        every hit is acquired (refcount++), ``cached_len``/
+        ``prefill_pos`` start at the cached boundary, and only the miss
+        suffix is allocated fresh.  At least one token is always left
+        for the engine to recompute (the first sampled token needs the
+        final position's logits); when that cap lands mid-block — a
+        fully cached, block-aligned context — the tail hit becomes a
+        pinned copy-on-write source and a private block takes its place
+        in the table."""
+        al = self.allocator
+        bs = al.block_size
+        toks = req.prefill_tokens
+        hits = al.match_prefix(toks)
+        cached_len = min(len(hits) * bs, len(toks) - 1)
+        n_keep = cached_len // bs
+        blocks = list(hits[:n_keep])
+        al.acquire(blocks)
+        cow_src: Optional[int] = None
+        if cached_len > n_keep * bs:
+            cand = hits[n_keep]
+            # pinning an IDLE hit takes it off the evictable LRU — one
+            # block of allocatable capacity the admission check did not
+            # charge.  Pin only if the remaining allocation still fits;
+            # otherwise forgo the partial-block hit (correctness never
+            # depends on COW, it only saves recompute).
+            pin_cost = 1 if al.refcount(cand) == 0 else 0
+            if al.num_available - pin_cost >= need - n_keep:
+                cow_src = cand
+                al.acquire([cow_src])  # pinned: eviction may not scrub it
+            else:
+                cached_len = n_keep * bs
+        blocks.extend(al.allocate(need - n_keep))
+        if al.prefix_cache:
+            n_hit = n_keep + (1 if cow_src is not None else 0)
+            al.hits += n_hit
+            al.misses += al.blocks_for(len(toks)) - n_hit
+            al.tokens_saved += cached_len
+            if cow_src is not None:
+                al.cow_copies += 1
+        req.alloc = SequenceAllocation(blocks, bs)
+        req.cached_len = cached_len
+        req.cow_src = cow_src
+        req.prefill_pos = cached_len
+        req.verified_len = cached_len
+        req.drafted_len = cached_len
         req.slot = self._free_slots.pop()
         req.state = RequestState.RUNNING
         req.admitted_step = step
         self.running[req.slot] = req
+
+    def _drop_cow_pin(self, req: Request) -> None:
+        """Release the copy-on-write source pin if the engine never got
+        to copy it (teardown between activation and first prefill)."""
+        if req.cow_src is not None:
+            self.allocator.release([req.cow_src])
+            req.cow_src = None
+
+    def _release_blocks(self, req: Request, start: int, stop: int) -> List[int]:
+        """Release every block ``req`` owns and return the subset that
+        (a) reached the free list AND (b) holds the dirty position
+        range [start, stop) the caller wants scrubbed.  Blocks that
+        stay referenced (shared) or parked as idle cache hold valid
+        content and are NEVER scrubbed."""
+        dirty = req.alloc.blocks_covering(start, stop)
+        freed = set(self.allocator.release(req.alloc.blocks))
+        self._drop_cow_pin(req)
+        return [b for b in dirty if b in freed]
 
     # -- on-demand growth (recompute mode) ---------------------------------
 
@@ -403,7 +483,7 @@ class Scheduler:
         need = self.allocator.blocks_for(min_positions) - len(req.alloc.blocks)
         if need <= 0:
             return True
-        if need > self.allocator.num_free + self._freeable_below(req):
+        if need > self.allocator.num_available + self._freeable_below(req):
             # even evicting everyone less deserving would not cover it:
             # park THIS request until more deserving work retires.  The
             # globally most deserving request can never land here (all
@@ -427,11 +507,15 @@ class Scheduler:
         on_preempt: Optional[PreemptCallback] = None,
     ) -> List[int]:
         """Evict a RUNNING request: release every block it owns and
-        park it for a later recompute-resume.  Returns the block ids
-        that were ever written — [0, drafted_len) — which the engine's
-        callback must scrub before the free list reuses them (a
-        preempted sequence's COMMITTED K/V is dead too: the resume
-        recomputes it, so nothing may survive in the pool).
+        park it for a later recompute-resume.  Returns the written
+        block ids ([0, drafted_len)) that actually reached the free
+        list, which the engine's callback must scrub before the
+        allocator reuses them.  Without prefix caching that is every
+        written block (a preempted sequence's committed K/V is dead:
+        the resume recomputes it).  With it, registered blocks instead
+        stay valid cache — shared ones keep their other references and
+        the victim's own published prefix parks on the LRU, where the
+        resume can hit it again; they are scrubbed only if evicted.
 
         Speculative state needs no special rollback here: `output`
         only ever holds committed tokens (verify commits before the
@@ -441,8 +525,7 @@ class Scheduler:
         """
         assert req.state is RequestState.RUNNING
         assert self.preemption == "recompute", "preemption is off"
-        scrub = req.alloc.blocks_covering(0, req.drafted_len)
-        self.allocator.free(req.alloc.blocks)
+        scrub = self._release_blocks(req, 0, req.drafted_len)
         slot = req.slot
         req.alloc = None
         del self.running[slot]
@@ -453,6 +536,7 @@ class Scheduler:
         req.prefill_pos = 0
         req.verified_len = 0
         req.drafted_len = 0
+        req.cached_len = 0
         req.preempt_count += 1
         req.preempted_step = step
         req.preempted_time = self.clock()
@@ -473,8 +557,7 @@ class Scheduler:
         elif req.state is RequestState.PREEMPTED:
             self.preempted.remove(req)
         elif req.state is RequestState.RUNNING:
-            stale = req.alloc.blocks_covering(req.verified_len, req.drafted_len)
-            self.allocator.free(req.alloc.blocks)
+            stale = self._release_blocks(req, req.verified_len, req.drafted_len)
             req.alloc = None
             del self.running[req.slot]
             self._free_slots.append(req.slot)
@@ -516,8 +599,7 @@ class Scheduler:
         assert req.state is RequestState.RUNNING
         req.state = RequestState.FINISHED
         req.finished_step = step
-        stale = req.alloc.blocks_covering(req.verified_len, req.drafted_len)
-        self.allocator.free(req.alloc.blocks)
+        stale = self._release_blocks(req, req.verified_len, req.drafted_len)
         req.alloc = None
         del self.running[req.slot]
         self._free_slots.append(req.slot)

@@ -150,7 +150,8 @@ def test_schema_rejects_malformed_events():
 
 def test_grammar_rejects_malformed_sequences():
     sub = TraceEvent("SUBMIT", 0, 0, 0.0, {"prompt_len": 4, "max_new": 4})
-    adm = TraceEvent("ADMIT", 0, 1, 1.0, {"slot": 0, "blocks": 1})
+    adm = TraceEvent("ADMIT", 0, 1, 1.0,
+                     {"slot": 0, "blocks": 1, "cached_len": 0})
     fin = TraceEvent("FINISH", 0, 3, 3.0, {"out_len": 4})
     res = TraceEvent("RESUME", 0, 2, 2.0,
                      {"slot": 0, "blocks": 1, "parked_steps": 1})
@@ -165,7 +166,8 @@ def test_grammar_rejects_malformed_sequences():
         # timestamps must be non-decreasing
         check_request_events([
             sub,
-            TraceEvent("ADMIT", 0, 1, -1.0, {"slot": 0, "blocks": 1}),
+            TraceEvent("ADMIT", 0, 1, -1.0,
+                       {"slot": 0, "blocks": 1, "cached_len": 0}),
             fin,
         ])
 
@@ -231,6 +233,29 @@ def test_prometheus_text_syntax(tmp_path, traced_run):
     assert 'le="+Inf"' in text
     # live-sourced counters reflect engine state at scrape time
     assert eng.metrics.value("serve_steps_total") == eng.stats.steps
+
+
+def test_admit_schema_requires_cached_len():
+    with pytest.raises(TraceInvariantError):
+        validate_event(TraceEvent("ADMIT", 0, 0, 0.0, {"slot": 0, "blocks": 1}))
+
+
+def test_prom_gate_requires_prefix_cache_families(tmp_path):
+    # a serving export without the prefix-cache counters is rejected;
+    # files with no serve_ families at all are exempt from the gate
+    p = tmp_path / "m.prom"
+    p.write_text("serve_steps_total 3\n")
+    with pytest.raises(TraceInvariantError):
+        check_prom_file(str(p))
+    p.write_text("unrelated_metric 1\n")
+    assert check_prom_file(str(p)) == 1
+    p.write_text(
+        "serve_steps_total 3\n"
+        "serve_prefix_cache_hits_total 0\n"
+        "serve_prefix_cache_misses_total 0\n"
+        "serve_prefix_cache_evictions_total 0\n"
+    )
+    assert check_prom_file(str(p)) == 4
 
 
 def test_latency_summary_sane(traced_run):

@@ -61,6 +61,26 @@ def test_block_alloc_free_roundtrip():
     assert al.num_free == 7
 
 
+def test_free_rejects_double_free_and_bad_ids():
+    """free() validates instead of silently corrupting the free list:
+    a double-freed block would otherwise be handed to two sequences."""
+    al = BlockAllocator(num_blocks=8, block_size=4)
+    a = al.allocate(2)
+    al.free(a)
+    with pytest.raises(ValueError, match="double free"):
+        al.free([a[0]])
+    with pytest.raises(ValueError, match="out-of-range"):
+        al.free([8])
+    with pytest.raises(ValueError, match="out-of-range"):
+        al.free([-1])
+    with pytest.raises(ValueError, match="scratch"):
+        al.free([0])
+    b = al.allocate(1)
+    with pytest.raises(ValueError, match="double free"):
+        al.free(b + b)  # duplicate ids within one call
+    assert al.num_free == 7  # b[0] landed exactly once despite the raise
+
+
 def test_blocks_for_rounding():
     al = BlockAllocator(num_blocks=8, block_size=4)
     assert al.blocks_for(1) == 1

@@ -1,0 +1,365 @@
+"""Block-level prefix caching (PR 8 acceptance bar).
+
+Prefix caching is an EXECUTION STRATEGY, not a model: admission serving
+the leading full blocks of a prompt from the content-addressed cache
+and prefilling only the miss suffix must produce exactly the greedy
+tokens a cache-off engine produces, across chunked/unchunked prefill,
+spec_k on/off and tp=1/2 (the tp=2 cases run in a subprocess with
+forced host devices, like tests/test_preemption.py).  Alongside token
+identity this file pins the allocator's content-addressing semantics
+(chain hashes, refcounted acquire/release, LRU eviction ordering),
+copy-on-write on fully-cached prompts, forced-eviction recovery,
+preempt-then-resume hitting the victim's own published prefix, and the
+batched-scrub coalescing (one jitted dispatch per step, not one per
+retire/evict event).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.modes import NumericsConfig
+from repro.models import build
+from repro.serving import (
+    BlockAllocator,
+    ContinuousBatchingEngine,
+    PagedServeConfig,
+)
+
+CFG = ModelConfig(
+    name="toy-prefix", family="dense", n_layers=2, d_model=32, n_heads=4,
+    n_kv=2, head_dim=8, d_ff=64, vocab=61,
+    numerics=NumericsConfig(mode="posit_quant", n=16, es=1),
+    act_dtype="float32", param_dtype="float32",
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return build(CFG).init(jax.random.PRNGKey(0))
+
+
+def _engine(params, *, prefix_cache, chunk=0, spec=0, num_blocks=64,
+            max_slots=4, preemption="off"):
+    return ContinuousBatchingEngine(
+        CFG, params=params,
+        pcfg=PagedServeConfig(block_size=4, num_blocks=num_blocks,
+                              max_slots=max_slots, max_seq_len=48,
+                              prefill_chunk=chunk, spec_k=spec,
+                              preemption=preemption,
+                              prefix_cache=prefix_cache))
+
+
+# ---------------------------------------------------------------------------
+# allocator: content addressing, refcounts, LRU eviction
+# ---------------------------------------------------------------------------
+
+def test_match_prefix_chain_hash_semantics():
+    al = BlockAllocator(16, 4, prefix_cache=True)
+    toks = list(range(11))  # 2 full blocks + a partial tail
+    blocks = al.allocate(3)
+    al.register(toks, blocks)
+    # only FULL blocks are addressable; the partial tail never is
+    assert al.match_prefix(toks) == blocks[:2]
+    assert al.match_prefix(toks[:8]) == blocks[:2]
+    assert al.match_prefix(toks[:7]) == blocks[:1]
+    assert al.match_prefix(toks[:3]) == []
+    # chain hashing is position-dependent: the same 4 tokens under a
+    # different parent prefix must NOT resolve to the cached block
+    assert al.match_prefix([99] * 4 + toks[4:8]) == []
+    # a diverging second block still hits the shared first block
+    assert al.match_prefix(toks[:4] + [99] * 4) == blocks[:1]
+
+
+def test_release_parks_registered_blocks_and_acquire_repins():
+    al = BlockAllocator(16, 4, prefix_cache=True)
+    toks = list(range(8))
+    blocks = al.allocate(2)
+    al.register(toks, blocks)
+    assert al.release(blocks) == []  # registered: parked, NOT freed
+    assert al.num_cached_idle == 2 and al.num_referenced == 0
+    assert al.num_available == al.num_blocks - 1
+    # a hit re-pins the idle blocks: no longer evictable
+    hits = al.match_prefix(toks)
+    al.acquire(hits)
+    assert al.num_cached_idle == 0
+    assert all(al.refcount(b) == 1 for b in hits)
+    # unregistered blocks go straight back to the free list
+    other = al.allocate(1)
+    assert al.release(other) == other
+
+
+def test_lru_eviction_order_and_drain():
+    al = BlockAllocator(8, 4, prefix_cache=True)  # 7 allocatable
+    a = al.allocate(2)
+    b = al.allocate(2)
+    al.register(list(range(8)), a)
+    al.register(list(range(100, 108)), b)
+    al.release(a)  # a parked first -> evicted first
+    al.release(b)
+    assert al.num_free == 3 and al.num_cached_idle == 4
+    got = al.allocate(5)  # forces two evictions, oldest-released first
+    assert al.evictions == 2
+    assert set(al.drain_evicted()) == set(a)
+    assert al.drain_evicted() == []  # drain is destructive
+    assert set(a) <= set(got)  # the evicted blocks were reused
+    assert al.match_prefix(list(range(8))) == []  # a unregistered
+    assert al.match_prefix(list(range(100, 108))) == b  # b survives
+
+
+def test_shared_block_never_freed_while_referenced():
+    al = BlockAllocator(16, 4, prefix_cache=True)
+    toks = list(range(8))
+    owner = al.allocate(2)
+    al.register(toks, owner)
+    al.acquire(al.match_prefix(toks))  # a second sequence shares them
+    assert all(al.refcount(b) == 2 for b in owner)
+    with pytest.raises(ValueError, match="shared"):
+        al.free(owner)
+    assert al.release(owner) == []  # one ref left: still referenced
+    assert al.num_cached_idle == 0 and al.num_referenced == 2
+
+
+def test_prefix_cache_off_is_inert():
+    al = BlockAllocator(16, 4)
+    blocks = al.allocate(2)
+    al.register(list(range(8)), blocks)  # no-op
+    assert al.match_prefix(list(range(8))) == []
+    assert al.release(blocks) == blocks  # nothing parks on the LRU
+    assert al.num_cached == 0 and al.num_cached_idle == 0
+
+
+# ---------------------------------------------------------------------------
+# token identity across the config matrix (tp=1 half; tp=2 is below)
+# ---------------------------------------------------------------------------
+
+def _shared_prefix_workload(eng, rng, *, n=4, prefix_len=16, max_new=6):
+    shared = rng.integers(0, 61, prefix_len).tolist()
+    handles = []
+    for i in range(n):
+        tail = rng.integers(0, 61, 3 + i).tolist()
+        # stagger arrivals past the longest chunked prefill: registration
+        # happens at prefill completion, so back-to-back arrivals would
+        # all be admitted (blocks reserved) before any prefix is published
+        handles.append(eng.submit(shared + tail, max_new_tokens=max_new,
+                                  arrival_step=i * 10))
+    done = eng.run()
+    return [done[h.rid] for h in handles]
+
+
+@pytest.mark.parametrize("spec", [0, 2])
+@pytest.mark.parametrize("chunk", [0, 4])
+def test_shared_prefix_token_identical_cache_on_off(params, chunk, spec):
+    rng = np.random.default_rng(0)
+    off = _shared_prefix_workload(_engine(params, prefix_cache=False,
+                                          chunk=chunk, spec=spec),
+                                  np.random.default_rng(0))
+    eng = _engine(params, prefix_cache=True, chunk=chunk, spec=spec)
+    on = _shared_prefix_workload(eng, np.random.default_rng(0))
+    assert on == off, f"cache changed the stream (chunk={chunk} spec={spec})"
+    al = eng.allocator
+    assert al.hits > 0 and al.tokens_saved > 0, "cache never hit"
+    assert eng.metrics.value("serve_prefix_cache_hits_total") == al.hits
+    assert eng.metrics.value("serve_prefill_tokens_saved_total") == al.tokens_saved
+    del rng
+
+
+def test_identical_prompt_triggers_cow_and_stays_identical(params):
+    """A block-aligned prompt resubmitted verbatim hits EVERY block;
+    the capped last token lands mid-block, so the tail hit must be
+    copied out before the recompute write — the copy-on-write path."""
+    prompt = np.random.default_rng(1).integers(0, 61, 16).tolist()  # 4 blocks
+
+    def run(prefix_cache):
+        eng = _engine(params, prefix_cache=prefix_cache)
+        a = eng.submit(prompt, max_new_tokens=6)
+        b = eng.submit(prompt, max_new_tokens=6, arrival_step=2)
+        done = eng.run()
+        return [done[a.rid], done[b.rid]], eng
+
+    off, _ = run(False)
+    on, eng = run(True)
+    assert on == off
+    assert off[0] == off[1]  # same prompt, greedy: same stream
+    assert eng.allocator.cow_copies > 0, "fully-cached prompt never COWed"
+    # the shared source block was pinned during the copy and released
+    # after: nothing leaks once both requests retire
+    assert eng.allocator.num_referenced == 0
+
+
+def test_forced_eviction_keeps_streams_identical(params):
+    """A pool too small to keep every retired prefix cached: later
+    admissions evict idle cached blocks (scrub-then-reuse), and the
+    evicted prefix resubmitted afterwards simply misses and recomputes."""
+    rng = np.random.default_rng(2)
+    pa = rng.integers(0, 61, 16).tolist()
+    pb = rng.integers(0, 61, 16).tolist()
+
+    def run(prefix_cache):
+        # 9 allocatable blocks: one request needs 6 (16 prompt + 6 new
+        # tokens), so pb's admission must evict part of pa's parked
+        # 4-block prefix — and the resubmitted pa, its chain head gone,
+        # misses from block 0 and evicts the rest
+        eng = _engine(params, prefix_cache=prefix_cache, num_blocks=10,
+                      max_slots=1)
+        outs = []
+        for p in (pa, pb, pa):
+            h = eng.submit(p, max_new_tokens=6)
+            outs.append(eng.run()[h.rid])
+        return outs, eng
+
+    off, _ = run(False)
+    on, eng = run(True)
+    assert on == off
+    assert eng.allocator.evictions > 0, "pool pressure never evicted"
+    assert on[0] == on[2]  # same prompt, greedy: same stream
+    assert eng.metrics.value("serve_prefix_cache_evictions_total") == \
+        eng.allocator.evictions
+
+
+def test_preempt_resume_hits_own_published_prefix(params):
+    """Under recompute preemption a victim's registered blocks park on
+    the LRU; its resume walks the cache and reuses them instead of
+    recomputing the whole committed context — and still matches the
+    uninterrupted cache-off stream."""
+    rng = np.random.default_rng(3)
+    pa = rng.integers(0, 61, 8).tolist()
+    pb = rng.integers(0, 61, 8).tolist()
+
+    def run(prefix_cache, num_blocks=10, max_slots=2):
+        eng = _engine(params, prefix_cache=prefix_cache,
+                      num_blocks=num_blocks, max_slots=max_slots,
+                      preemption="recompute")
+        a = eng.submit(pa, max_new_tokens=12)
+        b = eng.submit(pb, max_new_tokens=12, arrival_step=1)
+        done = eng.run()
+        return [done[a.rid], done[b.rid]], eng
+
+    off, _ = run(False, num_blocks=64)  # uninterrupted reference
+    on, eng = run(True)
+    assert on == off
+    assert eng.stats.preemptions > 0, "pool pressure never evicted"
+    assert eng.allocator.hits > 0, "resume never hit the cache"
+    assert not eng.scheduler.has_work()
+    assert eng.allocator.num_referenced == 0
+
+
+# ---------------------------------------------------------------------------
+# batched scrubs: one dispatch per step, not one per event
+# ---------------------------------------------------------------------------
+
+def test_scrubs_coalesce_into_one_dispatch_per_step(params):
+    """Three same-step retires, each with a stale prefill-padding tail,
+    must produce exactly ONE jitted scrub dispatch (at the end-of-step
+    flush) — the per-event dispatches were coalesced."""
+    eng = _engine(params, prefix_cache=False, max_slots=3)
+    calls = []
+    orig = eng._scrub_fn
+
+    def counting(*args):
+        calls.append(eng.current_step)
+        return orig(*args)
+
+    eng._scrub_fn = counting
+    rng = np.random.default_rng(4)
+    # 5-token prompts pad to 8: positions [5, 8) stay stale => every
+    # retire reports a non-empty scrub set
+    hs = [eng.submit(rng.integers(0, 61, 5).tolist(), max_new_tokens=3)
+          for _ in range(3)]
+    eng.run()
+    finish = {h.finished_step for h in hs}
+    assert len(finish) == 1, "requests did not retire in the same step"
+    assert calls.count(finish.pop()) == 1, (
+        f"expected one coalesced scrub dispatch, saw {calls}")
+    assert eng._scrub_pending == []
+
+
+def test_scrubbed_pool_reads_zero_after_retire(params):
+    """The deferred scrub still lands before the step ends: the retired
+    request's stale tail — prefill padding past the last committed
+    token — reads back as zeros once the workload drains.  (Committed
+    K/V may persist in freed blocks; retire scrubs only the
+    written-but-never-committed range, same as the seed contract.)"""
+    eng = _engine(params, prefix_cache=False, num_blocks=8, max_slots=1)
+    # prompt 5 pads to 8; max_new=2 commits through position 6, so
+    # position 7 stays a stale padding write.  A fresh engine hands the
+    # request blocks [1, 2]; position 7 lives in block 2.
+    h = eng.submit(np.random.default_rng(5).integers(0, 61, 5).tolist(),
+                   max_new_tokens=2)
+    eng.run()
+    assert h.state.name == "FINISHED"
+    assert eng.allocator.num_free == 7
+    assert eng._scrub_pending == []
+    k = np.asarray(eng._k_pool)[:, 2]
+    v = np.asarray(eng._v_pool)[:, 2]
+    assert not k.any() and not v.any(), "stale padding tail not scrubbed"
+
+
+# ---------------------------------------------------------------------------
+# tp=2 half of the matrix (forced host devices, subprocess)
+# ---------------------------------------------------------------------------
+
+_TP_SCRIPT = textwrap.dedent("""
+    import numpy as np, jax
+    from repro.configs.base import ModelConfig
+    from repro.core.modes import NumericsConfig
+    from repro.models import build
+    from repro.serving import ContinuousBatchingEngine, PagedServeConfig
+
+    assert len(jax.devices()) >= 2, jax.devices()
+
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+        n_heads=4, n_kv=2, head_dim=8, d_ff=64, vocab=61,
+        numerics=NumericsConfig(mode="posit_quant", n=16, es=1),
+        act_dtype="float32", param_dtype="float32")
+    params = build(cfg).init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, 61, 16).tolist()
+    tails = [rng.integers(0, 61, 3 + i).tolist() for i in range(3)]
+
+    def run(tp, chunk, spec, prefix_cache):
+        eng = ContinuousBatchingEngine(cfg, params=params,
+            pcfg=PagedServeConfig(block_size=4, num_blocks=64,
+                                  max_slots=3, max_seq_len=48, tp=tp,
+                                  prefill_chunk=chunk, spec_k=spec,
+                                  prefix_cache=prefix_cache))
+        # arrivals staggered past the chunked prefill so each request
+        # sees the previous one's registered prefix
+        hs = [eng.submit(shared + t, max_new_tokens=6, arrival_step=i * 10)
+              for i, t in enumerate(tails)]
+        done = eng.run()
+        return [done[h.rid] for h in hs], eng
+
+    for chunk, spec in ((0, 0), (4, 2)):
+        base, _ = run(2, chunk, spec, False)
+        on, eng = run(2, chunk, spec, True)
+        assert eng.allocator.hits > 0, (chunk, spec)
+        assert base == on, (
+            f"tp2 prefix cache diverged chunk={chunk} spec={spec}: "
+            f"{base} vs {on}")
+    print("PREFIX-TP2-OK")
+""")
+
+
+@pytest.mark.slow
+def test_tp2_prefix_cache_token_identical_forced_devices():
+    """Prefix caching under tp=2 sharding (head-sharded KV pool) is
+    greedy-token-identical to the cache-off tp=2 engine, unchunked and
+    chunked+speculative.  Subprocess: the forced device count must be
+    set before jax initializes."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8")
+    env["JAX_PLATFORMS"] = "cpu"
+    src_dir = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src_dir) + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", _TP_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "PREFIX-TP2-OK" in proc.stdout

@@ -47,15 +47,27 @@ _SEED = int(os.environ.get("REPRO_PROP_SEED", "0"))
 
 def _check_invariants(sched: Scheduler, al: BlockAllocator) -> None:
     owned = [b for r in sched.running.values() for b in r.alloc.blocks]
-    assert len(owned) == len(set(owned)), "block double-allocated"
+    pins = [r.cow_src for r in sched.running.values() if r.cow_src is not None]
+    if not al.prefix_cache:
+        # without content addressing a block has exactly one owner; with
+        # it, shared prefix blocks legitimately appear in many tables
+        assert len(owned) == len(set(owned)), "block double-allocated"
+        assert al.num_free + len(owned) == al.num_blocks - 1, "block leak"
     assert SCRATCH_BLOCK not in owned, "scratch block handed out"
-    assert al.num_free + len(owned) == al.num_blocks - 1, "block leak"
+    # refcount conservation, both ways: every block is free, parked as
+    # idle cache, or referenced — and every reference is exactly one
+    # sequence's table entry or one COW pin
+    assert (al.num_free + al.num_cached_idle + al.num_referenced
+            == al.num_blocks - 1), "refcount conservation violated"
+    assert (sum(al.refcount(b) for b in range(al.num_blocks))
+            == len(owned) + len(pins)), "dangling/missing reference"
     for r in sched.running.values():
         assert r.verified_len <= r.drafted_len <= r.alloc.capacity(), (
             r.rid, r.verified_len, r.drafted_len, r.alloc.capacity())
     for r in sched.preempted:
         assert r.alloc is None and r.slot == -1, (
             "preempted request still holds blocks/slot", r.rid)
+        assert r.cow_src is None, ("preempted request holds a COW pin", r.rid)
 
 
 @settings(max_examples=25 * _MULT, deadline=None)
@@ -286,4 +298,131 @@ def test_preemptive_stream_preserves_invariants(seed, block_size, max_slots,
             "request neither finished nor cancelled", r.rid, r.state)
         assert r.alloc is None and r.slot == -1
     assert al.num_free == al.num_blocks - 1, "free list not restored"
+    assert not sched.running and not sched.waiting and not sched.preempted
+
+
+# ---------------------------------------------------------------------------
+# prefix caching (content-addressed allocator, refcounted sharing)
+# ---------------------------------------------------------------------------
+
+def _sim_prefill_cached(req: Request, al: BlockAllocator,
+                        block_size: int) -> None:
+    """What the engine does when a cache-aware activation reaches its
+    (suffix) prefill: apply the pending copy-on-write (releasing the
+    pinned source), write [prefill_pos, prefill_len) plus block
+    padding, then register the full-block prefix — content first,
+    mapping second."""
+    if req.cow_src is not None:
+        al.release([req.cow_src])
+        req.cow_src = None
+    start = req.prefill_pos
+    req.prefill_pos = req.prefill_len
+    req.verified_len = req.prefill_len
+    width = padded_prompt_len(req.prefill_len - start, block_size)
+    req.drafted_len = max(req.drafted_len,
+                          min(start + width, req.alloc.capacity()))
+    al.register(req.prefill_tokens, req.alloc.blocks)
+    al.drain_evicted()  # the engine scrubs these before the next write
+    if not req.output:
+        req.output.append(0)
+
+
+@settings(max_examples=25 * _MULT, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=10_000),
+    st.integers(min_value=2, max_value=5),
+    st.integers(min_value=1, max_value=4),
+    st.integers(min_value=0, max_value=3),
+    st.sampled_from([False, True]),
+)
+def test_prefix_cache_stream_preserves_invariants(seed, block_size, max_slots,
+                                                  spec_k, preemptive):
+    """Random streams of SHARED-PREFIX prompts (three prefix families,
+    random split points) through a prefix-caching allocator on a pool
+    small enough that retired prefixes park on the LRU and later
+    admissions evict them — under both FCFS and preemptive scheduling,
+    with random cancels.  On top of the base invariants, refcount
+    conservation (free + cached-idle + referenced == pool) and the
+    reference census (sum of refcounts == table entries + COW pins) are
+    checked after every mutation; a preempted request holds no
+    refcount, which the census implies and the COW-pin check pins."""
+    rng = np.random.default_rng(seed + 1 + _SEED * 100_003)
+    num_blocks = int(rng.integers(6, 20))
+    max_seq_len = int(rng.integers(8, 40))
+    clock = [0.0]
+    al = BlockAllocator(num_blocks, block_size, prefix_cache=True)
+    sched = Scheduler(al, max_slots, max_seq_len, spec_k=spec_k,
+                      preemption="recompute" if preemptive else "off",
+                      clock=lambda: clock[0])
+
+    reqs = []
+    arrival = 0
+    for rid in range(int(rng.integers(2, 14))):
+        fam = int(rng.integers(0, 3))
+        pref_len = int(rng.integers(0, max_seq_len - 1))
+        plen = pref_len + int(rng.integers(1, max_seq_len - pref_len))
+        prompt = ([(fam * 29 + j) % 97 for j in range(pref_len)]
+                  + [1000 + rid * 50 + j for j in range(plen - pref_len)])
+        max_new = int(rng.integers(1, max_seq_len - plen + 1))
+        req = Request(rid=rid, prompt=prompt, max_new_tokens=max_new,
+                      arrival_step=arrival,
+                      priority=int(rng.integers(0, 3)),
+                      submit_time=clock[0])
+        arrival += int(rng.integers(0, 3))
+        try:
+            sched.submit(req)
+        except ValueError:
+            continue  # could never fit the pool: rejected at submit
+        reqs.append(req)
+
+    w = spec_k + 1 if spec_k else 1
+    step = 0
+    while sched.has_work():
+        clock[0] += float(rng.random())
+        for req in sched.admit(step, on_preempt=None):
+            assert req.prefill_pos == req.cached_len <= req.prefill_len - 1
+            _check_invariants(sched, al)
+            _sim_prefill_cached(req, al, block_size)
+            _check_invariants(sched, al)
+        for req in sorted(sched.running.values(), key=Scheduler.deserving,
+                          reverse=True):
+            if req.state is not RequestState.RUNNING:
+                continue  # evicted by a more deserving grower this step
+            if not req.prefill_done:
+                continue
+            if rng.random() < 0.04:
+                sched.cancel(req, step)  # client abort mid-stream
+                _check_invariants(sched, al)
+                continue
+            if req.is_done() or (req.output and rng.random() < 0.10):
+                sched.retire(req, step)
+                _check_invariants(sched, al)
+                continue
+            if preemptive:
+                if not sched.grow(req, req.verified_len + w, None, step):
+                    _check_invariants(sched, al)
+                    continue
+            if spec_k:
+                base = req.verified_len
+                req.drafted_len = max(req.drafted_len, base + w)
+                commit = min(int(rng.integers(1, w + 1)),
+                             req.max_new_tokens - len(req.output))
+                sched.rollback(req, base + commit)
+                req.output.extend([0] * commit)
+            else:
+                req.verified_len += 1
+                req.drafted_len = max(req.drafted_len, req.verified_len)
+                req.output.append(0)
+            _check_invariants(sched, al)
+        step += 1
+        assert step < 20_000, "stream did not drain (livelock?)"
+
+    for r in reqs:
+        assert r.state in (RequestState.FINISHED, RequestState.CANCELLED)
+        assert r.alloc is None and r.slot == -1 and r.cow_src is None
+    # drained pool: no references survive; registered prefixes park on
+    # the LRU (still-valid cache), everything else is back on the free
+    # list, and together they exhaust the allocatable pool
+    assert al.num_referenced == 0, "a retired request left a refcount"
+    assert al.num_free + al.num_cached_idle == al.num_blocks - 1
     assert not sched.running and not sched.waiting and not sched.preempted
