@@ -6,6 +6,7 @@
   kernels  — Pallas/sim engine micro-benchmarks
   train    — posit16-quantized LM training curve (system-level)
   numerics — per-site policy accuracy/cost frontier (BENCH_numerics.json)
+  conformance — oracle-matrix throughput + agreement (same JSON)
 
 ``python -m benchmarks.run`` runs everything in quick mode and prints
 CSV blocks; ``--full`` uses the full Table II protocol.
@@ -132,6 +133,60 @@ def bench_numerics(json_path="BENCH_numerics.json", budget=0.05):
     print(f"# wrote {json_path}")
 
 
+def bench_conformance(json_path="BENCH_numerics.json", count=1 << 16):
+    """Oracle-matrix throughput + agreement on one batch of plam_mul.
+
+    Times every conformance implementation on the same ``count``-pattern
+    Posit<16,1> batch (patterns/s) and differentially compares each one
+    against the JAX reference — the mismatch count is asserted to be 0,
+    so a red bench run means the implementations diverged, not just got
+    slow.  Results merge into ``json_path`` under the ``conformance``
+    key, next to the numerics frontier.
+    """
+    import os
+    import time
+
+    import numpy as np
+
+    from repro.conformance import default_impls, outputs_equal
+    from repro.numerics import PositSpec
+
+    spec = PositSpec(16, 1)
+    rng = np.random.default_rng(0)
+    pa = rng.integers(0, 1 << 16, count).astype(np.int32)
+    pb = rng.integers(0, 1 << 16, count).astype(np.int32)
+    impls = default_impls(spec)
+    # the pure-Python golden model is ~1e4x slower; time a slice and
+    # differentially check the same slice rather than the full batch
+    golden_lanes = 2048
+    ref = np.asarray(impls["jax"].run("plam_mul", (pa, pb), spec))
+
+    rows = []
+    print("impl,patterns_per_s,lanes,mismatches")
+    for name, im in impls.items():
+        lanes = golden_lanes if name == "golden" else count
+        ins = (pa[:lanes], pb[:lanes])
+        im.run("plam_mul", ins, spec)  # warm the jit caches
+        t0 = time.perf_counter()
+        out = im.run("plam_mul", ins, spec)
+        dt = time.perf_counter() - t0
+        bad = int((~outputs_equal(ref[:lanes], np.asarray(out))).sum())
+        assert bad == 0, f"{name} disagrees with jax on {bad} lanes"
+        rows.append({"impl": name, "patterns_per_s": lanes / dt,
+                     "lanes": lanes, "mismatches": bad})
+        print(f"{name},{lanes / dt:.3e},{lanes},{bad}")
+
+    doc = {}
+    if os.path.exists(json_path):
+        with open(json_path) as f:
+            doc = json.load(f)
+    doc["conformance"] = {"spec": [spec.n, spec.es], "op": "plam_mul",
+                          "rows": rows}
+    with open(json_path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"# merged conformance section into {json_path}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -146,7 +201,7 @@ def main() -> None:
         if args.only is not None:
             return args.only == name
         if args.quick:
-            return name in ("kernels", "error", "numerics")
+            return name in ("kernels", "error", "numerics", "conformance")
         return True
 
     if want("error"):
@@ -171,6 +226,10 @@ def main() -> None:
     if want("numerics"):
         _section("numerics: per-site policy accuracy/cost frontier")
         bench_numerics(json_path=args.numerics_json)
+
+    if want("conformance"):
+        _section("conformance: oracle-matrix throughput + agreement")
+        bench_conformance(json_path=args.numerics_json)
 
     if want("table2"):
         _section("table2: DNN inference accuracy (paper Table II)")

@@ -1,0 +1,46 @@
+"""Differential conformance + fuzzing for the posit/PLAM numerics stack.
+
+The repo carries four semi-independent implementations of Posit<n,es>
+arithmetic — the pure-Python golden model (``numerics/golden.py``), the
+vectorized JAX bit kernels (``numerics/posit.py`` / ``plam.py``), the
+exhaustive-table codec (``numerics/table.py``) and the Pallas kernels
+(``kernels/posit_codec.py`` / ``plam_matmul.py``).  This package is the
+correctness backbone that keeps them mutually bit-exact:
+
+* :mod:`repro.conformance.oracles` — a uniform :class:`Impl` interface
+  over every implementation (encode / decode / quantize / exact_mul /
+  plam_mul per :class:`~repro.numerics.PositSpec`).
+* :mod:`repro.conformance.fuzz` — seeded structured fuzzers (uniform,
+  boundary-biased and DNN-like operand distributions) running N-way
+  differential comparison plus metamorphic property checks.
+* :mod:`repro.conformance.shrink` — mismatch minimization down to a
+  single operand pair, with full field decodes and a paste-ready
+  regression-test snippet.
+* :mod:`repro.conformance.vectors` — committed golden vector files
+  under ``tests/vectors/`` (generate / check / regenerate).
+
+CLI: ``python -m repro.conformance {gen,check,fuzz}``.
+"""
+
+from .oracles import (  # noqa: F401
+    CODEC_OPS,
+    MUL_OPS,
+    OPS,
+    FaultyImpl,
+    GoldenImpl,
+    Impl,
+    JaxImpl,
+    PallasImpl,
+    TableImpl,
+    default_impls,
+    outputs_equal,
+)
+from .fuzz import (  # noqa: F401
+    FuzzReport,
+    Mismatch,
+    boundary_patterns,
+    run_fuzz,
+    sample_patterns,
+)
+from .shrink import reproducer, shrink_pair  # noqa: F401
+from .vectors import check_vectors, generate_vectors  # noqa: F401

@@ -1,0 +1,87 @@
+"""CLI: ``python -m repro.conformance {gen,check,fuzz}``.
+
+* ``gen``   — regenerate the committed vector files under
+  ``tests/vectors/`` (cross-checking the whole oracle matrix first).
+* ``check`` — verify committed vectors against every implementation;
+  exit 1 on drift.  This is the fast-lane CI gate.
+* ``fuzz``  — run the seeded differential + metamorphic fuzzer; on
+  mismatch, print the shrunk minimal reproducers, write them to
+  ``--out`` for CI artifact upload, and exit 1.  ``REPRO_PROP_MULT``
+  scales the per-batch example budget (the nightly stress lane runs
+  10x across a seed matrix).
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+from repro.numerics import PositSpec
+
+from .fuzz import DEFAULT_SPECS, run_fuzz
+from .vectors import VECTOR_DIR, check_vectors, generate_vectors
+
+
+def _parse_specs(text):
+    if not text:
+        return DEFAULT_SPECS
+    out = []
+    for item in text.split(","):
+        n, es = item.strip().split(":")
+        out.append(PositSpec(int(n), int(es)))
+    return tuple(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.conformance")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    g = sub.add_parser("gen", help="regenerate committed golden vectors")
+    g.add_argument("--dir", default=None, help=f"vector dir (default {VECTOR_DIR})")
+    g.add_argument("--seed", type=int, default=0)
+
+    c = sub.add_parser("check", help="verify committed vectors (CI fast gate)")
+    c.add_argument("--dir", default=None)
+
+    f = sub.add_parser("fuzz", help="differential + metamorphic fuzz")
+    f.add_argument("--seed", type=int, default=0)
+    f.add_argument("--count", type=int, default=2048,
+                   help="operands per (spec, mode); REPRO_PROP_MULT multiplies")
+    f.add_argument("--specs", default=None,
+                   help='comma list like "16:1,8:0" (default: the full matrix)')
+    f.add_argument("--out", default=None,
+                   help="directory for shrunk-reproducer artifacts on failure")
+
+    args = ap.parse_args(argv)
+
+    if args.cmd == "gen":
+        paths = generate_vectors(directory=args.dir and pathlib.Path(args.dir),
+                                 seed=args.seed, log=print)
+        print(f"wrote {len(paths)} vector files")
+        return 0
+
+    if args.cmd == "check":
+        failures = check_vectors(directory=args.dir and pathlib.Path(args.dir),
+                                 log=lambda s: None)
+        if failures:
+            print("conformance vector check FAILED:")
+            for msg in failures:
+                print("  " + msg)
+            return 1
+        print("conformance vectors: all implementations agree")
+        return 0
+
+    report = run_fuzz(specs=_parse_specs(args.specs), seed=args.seed,
+                      count=args.count, log=print)
+    print(report.summary())
+    if not report.ok and args.out:
+        out = pathlib.Path(args.out)
+        out.mkdir(parents=True, exist_ok=True)
+        name = f"conformance_seed{args.seed}.txt"
+        (out / name).write_text(report.summary() + "\n")
+        print(f"wrote {out / name}")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

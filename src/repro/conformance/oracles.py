@@ -1,0 +1,449 @@
+"""Uniform oracle interface over every posit/PLAM implementation.
+
+An :class:`Impl` exposes the five conformance operations —
+
+* ``encode(x, spec)``    : float32 values  -> posit patterns (int32)
+* ``decode(bits, spec)`` : posit patterns  -> float32 values
+* ``quantize(x, spec)``  : float32 values  -> float32 posit-grid values
+* ``exact_mul(pa, pb, spec)`` : exact posit product patterns
+* ``plam_mul(pa, pb, spec)``  : PLAM approximate product patterns
+
+— over host numpy arrays, so the differential fuzzer can compare any
+two implementations elementwise without caring which runtime each one
+lives in.  Four families are wrapped:
+
+* :class:`GoldenImpl`  — the pure-Python golden model (``golden.py``),
+  batch-evaluated through a per-pattern field cache so exhaustive
+  small-n sweeps stay tractable.
+* :class:`JaxImpl`     — the vectorized bit kernels (``posit.py`` /
+  ``plam.py``); ``variant="logfix"`` swaps in the Fig. 4 single-word
+  datapath for ``plam_mul``.
+* :class:`TableImpl`   — the exhaustive-table codec (``table.py``) for
+  the codec ops, plus an independent float64 table formulation of both
+  multipliers (decode via value table, multiply/approximate in f64,
+  encode via threshold search).
+* :class:`PallasImpl`  — the Pallas kernels (``kernels/posit_codec.py``),
+  in interpret mode everywhere and compiled on TPU.
+
+:class:`FaultyImpl` wraps any of the above and XORs a bit into one
+op's output — the meta-testing hook that proves the differential
+fuzzer actually catches single-bit faults in any layer.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+
+import numpy as np
+
+from repro.numerics import PositSpec, golden
+
+OPS = ("encode", "decode", "quantize", "exact_mul", "plam_mul")
+CODEC_OPS = ("encode", "decode", "quantize")
+MUL_OPS = ("exact_mul", "plam_mul")
+
+
+class Impl:
+    """Base class: one named implementation of the conformance ops."""
+
+    name = "base"
+
+    def ops(self, spec: PositSpec):
+        """The subset of OPS this impl supports for ``spec``."""
+        return OPS
+
+    # each method: numpy in, numpy out (int32 patterns / float32 values)
+    def encode(self, x, spec: PositSpec):
+        raise NotImplementedError
+
+    def decode(self, bits, spec: PositSpec):
+        raise NotImplementedError
+
+    def quantize(self, x, spec: PositSpec):
+        raise NotImplementedError
+
+    def exact_mul(self, pa, pb, spec: PositSpec):
+        raise NotImplementedError
+
+    def plam_mul(self, pa, pb, spec: PositSpec):
+        raise NotImplementedError
+
+    def run(self, op: str, inputs, spec: PositSpec):
+        return getattr(self, op)(*inputs, spec)
+
+
+def outputs_equal(a, b):
+    """Elementwise output agreement: exact bits, NaN == NaN."""
+    a = np.asarray(a)
+    b = np.asarray(b)
+    if a.dtype.kind == "f":
+        both_nan = np.isnan(a) & np.isnan(b)
+        av = a.astype(np.float32).view(np.uint32)
+        bv = b.astype(np.float32).view(np.uint32)
+        return (av == bv) | both_nan
+    return np.asarray(a, np.int64) == np.asarray(b, np.int64)
+
+
+# ---------------------------------------------------------------------------
+# golden (pure Python, field-cached batch loops)
+# ---------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=16)
+def _golden_fields(n: int, es: int):
+    """(sign, k, e, f) per pattern, None for zero/NaR — the batch cache."""
+    nar = 1 << (n - 1)
+    return tuple(
+        None if p in (0, nar) else golden.decode_fields_py(p, n, es)
+        for p in range(1 << n)
+    )
+
+
+@lru_cache(maxsize=16)
+def _golden_values(n: int, es: int):
+    return tuple(golden.decode_py(p, n, es) for p in range(1 << n))
+
+
+class GoldenImpl(Impl):
+    name = "golden"
+
+    def ops(self, spec):
+        # the float64 golden model is exact for every supported spec
+        return OPS
+
+    def encode(self, x, spec):
+        n, es = spec.n, spec.es
+        return np.array(
+            [golden.encode_py(float(v), n, es) for v in np.ravel(x)], np.int32
+        ).reshape(np.shape(x))
+
+    def decode(self, bits, spec):
+        vals = _golden_values(spec.n, spec.es)
+        mask = spec.mask_n
+        return np.array(
+            [vals[int(b) & mask] for b in np.ravel(bits)], np.float32
+        ).reshape(np.shape(bits))
+
+    def quantize(self, x, spec):
+        return self.decode(self.encode(x, spec), spec)
+
+    def _mul(self, pa, pb, spec, plam: bool):
+        n, es = spec.n, spec.es
+        nar = spec.nar
+        mask = spec.mask_n
+        fields = _golden_fields(n, es)
+        enc = golden.encode_py
+        out = np.empty(np.shape(pa), np.int32).ravel()
+        pa_flat = np.ravel(np.asarray(pa, np.int64) & mask)
+        pb_flat = np.ravel(np.asarray(pb, np.int64) & mask)
+        for i in range(out.shape[0]):
+            a, b = int(pa_flat[i]), int(pb_flat[i])
+            if a == nar or b == nar:
+                out[i] = nar
+                continue
+            if a == 0 or b == 0:
+                out[i] = 0
+                continue
+            sa, ka, ea, fa = fields[a]
+            sb, kb, eb, fb = fields[b]
+            s = sa ^ sb
+            scale = (ka + kb) * (1 << es) + (ea + eb)
+            if plam:
+                f = fa + fb  # eq. (17)
+                if f >= 1.0:  # eqs. (19)-(21)
+                    f -= 1.0
+                    scale += 1
+                val = 2.0**scale * (1.0 + f)
+            else:
+                val = 2.0**scale * (1.0 + fa) * (1.0 + fb)
+            out[i] = enc(-val if s else val, n, es)
+        return out.reshape(np.shape(pa))
+
+    def exact_mul(self, pa, pb, spec):
+        return self._mul(pa, pb, spec, plam=False)
+
+    def plam_mul(self, pa, pb, spec):
+        return self._mul(pa, pb, spec, plam=True)
+
+
+# ---------------------------------------------------------------------------
+# JAX bit kernels
+# ---------------------------------------------------------------------------
+
+
+class JaxImpl(Impl):
+    """numerics/posit.py + numerics/plam.py (``variant="logfix"`` uses the
+    Fig. 4 single-log-word datapath for plam_mul)."""
+
+    def __init__(self, variant: str = "field"):
+        assert variant in ("field", "logfix")
+        self.variant = variant
+        self.name = "jax" if variant == "field" else "jax_logfix"
+
+    def ops(self, spec):
+        if self.variant == "logfix":
+            return ("plam_mul",)
+        if 2 * spec.fbmax + 1 + spec.es > 30:
+            return ("encode", "decode", "quantize", "plam_mul")
+        return OPS
+
+    def encode(self, x, spec):
+        import jax.numpy as jnp
+        from repro.numerics import encode
+
+        return np.asarray(encode(jnp.asarray(np.float32(x)), spec)) & spec.mask_n
+
+    def decode(self, bits, spec):
+        import jax.numpy as jnp
+        from repro.numerics import decode
+
+        return np.asarray(decode(jnp.asarray(np.int32(bits)), spec))
+
+    def quantize(self, x, spec):
+        import jax.numpy as jnp
+        from repro.numerics import quantize
+
+        return np.asarray(quantize(jnp.asarray(np.float32(x)), spec))
+
+    def exact_mul(self, pa, pb, spec):
+        import jax.numpy as jnp
+        from repro.numerics import exact_mul
+
+        out = exact_mul(jnp.asarray(np.int32(pa)), jnp.asarray(np.int32(pb)), spec)
+        return np.asarray(out) & spec.mask_n
+
+    def plam_mul(self, pa, pb, spec):
+        import jax.numpy as jnp
+        from repro.numerics import plam_mul, plam_mul_logfix
+
+        fn = plam_mul_logfix if self.variant == "logfix" else plam_mul
+        out = fn(jnp.asarray(np.int32(pa)), jnp.asarray(np.int32(pb)), spec)
+        return np.asarray(out) & spec.mask_n
+
+
+# ---------------------------------------------------------------------------
+# exhaustive-table codec + float64 table multipliers
+# ---------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=16)
+def _table_f64(n: int, es: int):
+    vals = np.asarray(golden.all_values(n, es), np.float64)
+    mids = np.asarray(golden.thresholds(n, es), np.float64)
+    return vals, mids
+
+
+class TableImpl(Impl):
+    """table.py codec; multipliers re-derived from the f64 value tables.
+
+    The multiplier path is an independent formulation: decode both
+    operands through the value table, split magnitude into
+    (scale, fraction) with ``np.frexp`` (exact in f64), combine per the
+    exact product or the PLAM fraction-sum, and encode by binary search
+    over the threshold table with ties-to-even-pattern.
+    """
+
+    name = "table"
+
+    def ops(self, spec):
+        return OPS if spec.n <= 16 else ()
+
+    def encode(self, x, spec):
+        import jax.numpy as jnp
+        from repro.numerics import encode_table
+
+        return np.asarray(encode_table(jnp.asarray(np.float32(x)), spec)) & spec.mask_n
+
+    def decode(self, bits, spec):
+        import jax.numpy as jnp
+        from repro.numerics import decode_table
+
+        return np.asarray(decode_table(jnp.asarray(np.int32(bits)), spec))
+
+    def quantize(self, x, spec):
+        return self.decode(self.encode(x, spec), spec)
+
+    def _decode_f64(self, p, spec):
+        vals, _ = _table_f64(spec.n, spec.es)
+        mask, nar = spec.mask_n, spec.nar
+        p = np.asarray(p, np.int64) & mask
+        sign = (p >> (spec.n - 1)) & 1
+        mag = np.where(sign == 1, (-p) & mask, p)
+        body = mag & spec.maxpos_body
+        v = vals[np.clip(body - 1, 0, vals.shape[0] - 1)]
+        v = np.where(sign == 1, -v, v)
+        v = np.where(p == 0, 0.0, v)
+        return v, p == nar
+
+    def _encode_f64(self, a, sign, spec):
+        """|value| f64 + sign -> pattern, threshold search w/ pattern-RNE."""
+        _, mids = _table_f64(spec.n, spec.es)
+        j = np.searchsorted(mids, a, side="left")
+        jc = np.clip(j, 0, mids.shape[0] - 1)
+        tie = (j < mids.shape[0]) & (a == mids[jc])
+        body = j + 1
+        body = np.where(tie & (body % 2 == 1), body + 1, body)
+        body = np.clip(body, 1, spec.maxpos_body)
+        pat = np.where(sign, (-body) & spec.mask_n, body)
+        return pat.astype(np.int64)
+
+    def _mul(self, pa, pb, spec, plam: bool):
+        va, na = self._decode_f64(pa, spec)
+        vb, nb = self._decode_f64(pb, spec)
+        sign = (va < 0) ^ (vb < 0)
+        aa, ab = np.abs(va), np.abs(vb)
+        if plam:
+            # |x| = m * 2^e with m in [0.5, 1): fraction f = 2m - 1
+            ma, ea = np.frexp(np.where(aa == 0, 1.0, aa))
+            mb, eb = np.frexp(np.where(ab == 0, 1.0, ab))
+            fs = (2.0 * ma - 1.0) + (2.0 * mb - 1.0)
+            carry = (fs >= 1.0).astype(np.int64)
+            scale = (ea - 1) + (eb - 1) + carry
+            mag = np.ldexp(1.0 + fs - carry, scale)
+        else:
+            mag = aa * ab  # exact in f64 for n <= 16
+        out = self._encode_f64(mag, sign, spec)
+        out = np.where((aa == 0) | (ab == 0), 0, out)
+        out = np.where(na | nb, spec.nar, out)
+        return out.astype(np.int32)
+
+    def exact_mul(self, pa, pb, spec):
+        return self._mul(pa, pb, spec, plam=False)
+
+    def plam_mul(self, pa, pb, spec):
+        return self._mul(pa, pb, spec, plam=True)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels (interpret everywhere, compiled on TPU)
+# ---------------------------------------------------------------------------
+
+
+class PallasImpl(Impl):
+    """kernels/posit_codec.py staged over VMEM tiles.
+
+    ``interpret=True`` runs the kernel bodies as host jnp (the CPU
+    conformance mode); ``interpret=False`` lowers through Mosaic and is
+    only registered when a TPU backend is present.
+    """
+
+    def __init__(self, interpret: bool = True, block=(64, 256)):
+        self.interpret = interpret
+        self.block = block
+        self.name = "pallas_interp" if interpret else "pallas"
+
+    def ops(self, spec):
+        if 2 * spec.fbmax + 1 + spec.es > 30:
+            return ("encode", "decode", "quantize", "plam_mul")
+        return OPS
+
+    def _kw(self):
+        return dict(block=self.block, interpret=self.interpret)
+
+    def encode(self, x, spec):
+        from repro.kernels import posit_codec as pc
+
+        out = pc.posit_encode(np.float32(np.atleast_1d(x)), spec, **self._kw())
+        return (np.asarray(out) & spec.mask_n).reshape(np.shape(x))
+
+    def decode(self, bits, spec):
+        from repro.kernels import posit_codec as pc
+
+        out = pc.posit_decode(np.int32(np.atleast_1d(bits)), spec, **self._kw())
+        return np.asarray(out).reshape(np.shape(bits))
+
+    def quantize(self, x, spec):
+        from repro.kernels import posit_codec as pc
+
+        out = pc.posit_quantize(np.float32(np.atleast_1d(x)), spec, **self._kw())
+        return np.asarray(out).reshape(np.shape(x))
+
+    def exact_mul(self, pa, pb, spec):
+        from repro.kernels import posit_codec as pc
+
+        pa1, pb1 = np.int32(np.atleast_1d(pa)), np.int32(np.atleast_1d(pb))
+        out = pc.exact_mul_elementwise(pa1, pb1, spec, **self._kw())
+        return (np.asarray(out) & spec.mask_n).reshape(np.shape(pa))
+
+    def plam_mul(self, pa, pb, spec):
+        from repro.kernels import posit_codec as pc
+
+        pa1, pb1 = np.int32(np.atleast_1d(pa)), np.int32(np.atleast_1d(pb))
+        out = pc.plam_mul_elementwise(pa1, pb1, spec, **self._kw())
+        return (np.asarray(out) & spec.mask_n).reshape(np.shape(pa))
+
+
+# ---------------------------------------------------------------------------
+# fault injection (meta-testing)
+# ---------------------------------------------------------------------------
+
+
+class FaultyImpl(Impl):
+    """XOR ``1 << bit`` into ``op``'s output wherever ``trigger`` fires.
+
+    ``trigger(*inputs)`` returns a boolean mask (or scalar) selecting
+    the lanes to corrupt; the default corrupts every lane.  Used by the
+    conformance tests to prove a single-bit fault in any one
+    implementation is caught and shrunk by the fuzzer.
+    """
+
+    def __init__(self, base: Impl, op: str, bit: int = 0, trigger=None):
+        assert op in OPS, op
+        self.base = base
+        self.op = op
+        self.bit = bit
+        self.trigger = trigger
+        self.name = f"{base.name}!{op}^{bit}"
+
+    def ops(self, spec):
+        return self.base.ops(spec)
+
+    def _corrupt(self, out, inputs):
+        mask = (
+            np.ones(np.shape(out), bool)
+            if self.trigger is None
+            else np.broadcast_to(self.trigger(*inputs), np.shape(out))
+        )
+        out = np.asarray(out)
+        if out.dtype.kind == "f":
+            bits = out.astype(np.float32).view(np.uint32)
+            bits = np.where(mask, bits ^ np.uint32(1 << self.bit), bits)
+            return bits.view(np.float32)
+        return np.where(mask, out ^ (1 << self.bit), out)
+
+    def run(self, op, inputs, spec):
+        out = self.base.run(op, inputs, spec)
+        if op == self.op:
+            out = self._corrupt(out, inputs)
+        return out
+
+    def __getattr__(self, item):
+        if item in OPS:
+
+            def call(*args):
+                return self.run(item, args[:-1], args[-1])
+
+            return call
+        raise AttributeError(item)
+
+
+def default_impls(spec: PositSpec, include_compiled: str = "auto"):
+    """The oracle matrix for ``spec``: name -> Impl.
+
+    ``include_compiled`` controls the non-interpret Pallas oracle:
+    ``"auto"`` registers it only when a TPU backend is available (CPU
+    jaxlibs cannot compile Pallas kernels), ``True``/``False`` force.
+    """
+    impls = {
+        "golden": GoldenImpl(),
+        "jax": JaxImpl(),
+        "jax_logfix": JaxImpl(variant="logfix"),
+        "table": TableImpl(),
+        "pallas_interp": PallasImpl(interpret=True),
+    }
+    if include_compiled == "auto":
+        import jax
+
+        include_compiled = jax.default_backend() == "tpu"
+    if include_compiled:
+        impls["pallas"] = PallasImpl(interpret=False)
+    return impls

@@ -7,8 +7,10 @@ from .decode_attention import (  # noqa: F401
     paged_decode_attention_ref,
 )
 from .ops import (  # noqa: F401
+    exact_mul_elementwise,
     plam_dense,
     plam_matmul_bits,
+    plam_mul_elementwise,
     posit_decode,
     posit_encode,
     posit_quantize,

@@ -40,6 +40,18 @@ def plam_dense(x, w_bits, spec: PositSpec = PositSpec(16, 1), **kw):
     return out.reshape(*lead, w_bits.shape[-1])
 
 
+def plam_mul_elementwise(a_bits, b_bits, spec: PositSpec = PositSpec(16, 1), **kw):
+    """Element-wise PLAM pattern product (conformance oracle surface)."""
+    kw.setdefault("interpret", _interpret_default())
+    return _pc.plam_mul_elementwise(a_bits, b_bits, spec, **kw)
+
+
+def exact_mul_elementwise(a_bits, b_bits, spec: PositSpec = PositSpec(16, 1), **kw):
+    """Element-wise exact posit pattern product (n <= 16)."""
+    kw.setdefault("interpret", _interpret_default())
+    return _pc.exact_mul_elementwise(a_bits, b_bits, spec, **kw)
+
+
 def posit_encode(x, spec: PositSpec = PositSpec(16, 1), **kw):
     kw.setdefault("interpret", _interpret_default())
     return _pc.posit_encode(x, spec, **kw)

@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.numerics import PositSpec
+from repro.numerics.plam import exact_mul as _exact_mul
+from repro.numerics.plam import plam_mul as _plam_mul
 from repro.numerics.posit import decode as _decode
 from repro.numerics.posit import encode as _encode
 
@@ -30,6 +32,14 @@ def _decode_kernel(b_ref, o_ref, *, spec: PositSpec):
 
 def _quantize_kernel(x_ref, o_ref, *, spec: PositSpec):
     o_ref[...] = _decode(_encode(x_ref[...], spec), spec)
+
+
+def _plam_mul_kernel(a_ref, b_ref, o_ref, *, spec: PositSpec):
+    o_ref[...] = _plam_mul(a_ref[...], b_ref[...], spec)
+
+
+def _exact_mul_kernel(a_ref, b_ref, o_ref, *, spec: PositSpec):
+    o_ref[...] = _exact_mul(a_ref[...], b_ref[...], spec)
 
 
 def _tiled_elementwise(kernel, x, out_dtype, spec, block, interpret):
@@ -55,6 +65,34 @@ def _tiled_elementwise(kernel, x, out_dtype, spec, block, interpret):
     return out.reshape(-1)[:total].reshape(shape)
 
 
+def _tiled_elementwise2(kernel, a, b, out_dtype, spec, block, interpret):
+    """Run a two-input element-wise kernel over 2D-tiled views of a, b."""
+    assert a.shape == b.shape, (a.shape, b.shape)
+    shape = a.shape
+    fa = a.reshape(-1)
+    fb = b.reshape(-1)
+    total = fa.shape[0]
+    bcols = block[0] * block[1]
+    pad = (-total) % bcols
+    if pad:
+        fa = jnp.pad(fa, (0, pad))
+        fb = jnp.pad(fb, (0, pad))
+    rows = fa.shape[0] // block[1]
+    a2 = fa.reshape(rows, block[1])
+    b2 = fb.reshape(rows, block[1])
+    grid = (rows // block[0],)
+    spec2 = pl.BlockSpec((block[0], block[1]), lambda i: (i, 0))
+    out = pl.pallas_call(
+        functools.partial(kernel, spec=spec),
+        grid=grid,
+        in_specs=[spec2, spec2],
+        out_specs=spec2,
+        out_shape=jax.ShapeDtypeStruct((rows, block[1]), out_dtype),
+        interpret=interpret,
+    )(a2, b2)
+    return out.reshape(-1)[:total].reshape(shape)
+
+
 @functools.partial(jax.jit, static_argnames=("spec", "block", "interpret"))
 def posit_encode(x, spec: PositSpec = PositSpec(16, 1), *, block=DEFAULT_BLOCK, interpret=False):
     return _tiled_elementwise(_encode_kernel, x.astype(jnp.float32), jnp.int32, spec, block, interpret)
@@ -68,3 +106,19 @@ def posit_decode(bits, spec: PositSpec = PositSpec(16, 1), *, block=DEFAULT_BLOC
 @functools.partial(jax.jit, static_argnames=("spec", "block", "interpret"))
 def posit_quantize(x, spec: PositSpec = PositSpec(16, 1), *, block=DEFAULT_BLOCK, interpret=False):
     return _tiled_elementwise(_quantize_kernel, x.astype(jnp.float32), jnp.float32, spec, block, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "block", "interpret"))
+def plam_mul_elementwise(a_bits, b_bits, spec: PositSpec = PositSpec(16, 1), *, block=DEFAULT_BLOCK, interpret=False):
+    """Element-wise PLAM pattern product staged over VMEM tiles."""
+    return _tiled_elementwise2(
+        _plam_mul_kernel, a_bits, b_bits, jnp.int32, spec, block, interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "block", "interpret"))
+def exact_mul_elementwise(a_bits, b_bits, spec: PositSpec = PositSpec(16, 1), *, block=DEFAULT_BLOCK, interpret=False):
+    """Element-wise exact posit pattern product (n <= 16) over VMEM tiles."""
+    return _tiled_elementwise2(
+        _exact_mul_kernel, a_bits, b_bits, jnp.int32, spec, block, interpret
+    )

@@ -29,6 +29,28 @@ def plam_matmul_ref(a_bits, b_bits, spec: PositSpec):
 
 
 @partial(jax.jit, static_argnames=("spec",))
+def plam_matmul_seqref(a_bits, b_bits, spec: PositSpec):
+    """Sequential-k PLAM matmul: BIT-identical to the Pallas kernel.
+
+    ``plam_matmul_ref`` reduces with ``jnp.sum``, whose f32 reduction
+    order XLA does not pin down, so it is only allclose to the kernel.
+    This reference accumulates k strictly ascending — the order the
+    kernel's ``fori_loop`` walks lanes within and across K blocks — so
+    ``np.array_equal`` comparisons are valid for any (M, N, K), ragged
+    or not.  The kernel's zero-padding lanes add exactly +0.0 and both
+    accumulators start at +0.0, so padding never perturbs a bit.
+    """
+    prods = plam_product_f32(a_bits[:, :, None], b_bits[None, :, :], spec)
+    m, k, n = prods.shape
+    acc0 = jnp.zeros((m, n), jnp.float32)
+
+    def body(i, acc):
+        return acc + prods[:, i, :]
+
+    return jax.lax.fori_loop(0, k, body, acc0)
+
+
+@partial(jax.jit, static_argnames=("spec",))
 def plam_dense_ref(x, w_bits, spec: PositSpec):
     """x (f32 [M,K]) @ posit-weights (bits [K,N]): quantize x, PLAM-matmul."""
     return plam_matmul_ref(encode(x, spec), w_bits, spec)

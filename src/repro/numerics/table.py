@@ -55,8 +55,23 @@ def encode_table(x, spec: PositSpec):
     vals_np, mids_np = tables(spec.n, spec.es)
     vals, mids = jnp.asarray(vals_np), jnp.asarray(mids_np)
     x32 = x.astype(jnp.float32)
-    a = jnp.abs(x32)
-    sign = jnp.signbit(x32)
+    # The bitcast must be the ONLY consumer of x32, mirroring
+    # posit.encode: XLA CPU executes with denormals-are-zero, and when
+    # a fused kLoop shares the parameter load between fp ops and a
+    # bitcast-convert, the bitcast sees the DAZ-flushed value — a
+    # subnormal input would read as +0.0 bits.  But posits never round
+    # a nonzero magnitude to zero (it saturates to minpos), so zero /
+    # NaR / sign all come from the raw bits, and |x| for the threshold
+    # search is RECONSTRUCTED from the magnitude bits.  (A subnormal
+    # |x| still lands on body 1 = minpos because DAZ makes the
+    # searchsorted compares see it below mids[0].)
+    bits = jax.lax.bitcast_convert_type(x32, jnp.uint32)
+    sign = (bits >> jnp.uint32(31)) != 0
+    is_zero = (bits & jnp.uint32(0x7FFFFFFF)) == jnp.uint32(0)
+    is_nar = ((bits >> jnp.uint32(23)) & jnp.uint32(0xFF)) == jnp.uint32(0xFF)
+    a = jax.lax.bitcast_convert_type(
+        bits & jnp.uint32(0x7FFFFFFF), jnp.float32
+    )
     j = jnp.searchsorted(mids, a, side="left").astype(I32)
     # mids[j-1] < a <= mids[j]  ->  candidate body j+1 (vals[j]);
     # exact tie a == mids[j] -> even pattern among bodies {j+1, j+2}.
@@ -69,6 +84,6 @@ def encode_table(x, spec: PositSpec):
         (jnp.uint32(0) - body.astype(jnp.uint32)) & jnp.uint32(spec.mask_n),
         body.astype(jnp.uint32),
     ).astype(I32)
-    pat = jnp.where(a == 0, I32(0), pat)
-    pat = jnp.where(jnp.isnan(x32) | jnp.isinf(x32), I32(spec.nar), pat)
+    pat = jnp.where(is_zero, I32(0), pat)
+    pat = jnp.where(is_nar, I32(spec.nar), pat)
     return pat
